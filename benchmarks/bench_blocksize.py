@@ -1,0 +1,39 @@
+"""Paper Fig. 11/12 + Table VI: block-size and input-size sweeps."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+
+from repro.core import BF16, codec, compress_array, search_for_array
+from repro.data.synthetic_weights import WeightSetSpec, generate
+
+from .common import time_fn
+
+
+def run():
+    rows = []
+    base = WeightSetSpec("deepseek-llm-7b-base", "bf16", 8 << 20, seed=3)
+    x = generate(base)
+    host = np.asarray(jax.device_get(x))
+
+    # Fig 11: throughput of the codec vs data block size
+    for block in (2048, 4096, 8192, 16384, 32768):
+        p = search_for_array(host, BF16, block_elems=block)
+        bits = codec.to_blocks(x, BF16, block)
+        enc = jax.jit(functools.partial(codec.encode_blocks, fmt=BF16, p=p))
+        t = time_fn(enc, bits, iters=3)
+        ct = compress_array(x, p, block_elems=block)
+        rows.append((f"fig11/blocksize_{block}", t * 1e6,
+                     f"GBps={host.nbytes / t / 1e9:.3f};"
+                     f"ratio={ct.ratio():.3f}"))
+
+    # Table VI: ratio vs input size (MB)
+    for mb in (1, 2, 4, 8, 16):
+        spec = dataclasses.replace(base, n_elems=mb << 19)  # bf16: 2 B/elem
+        xi = generate(spec)
+        ct = compress_array(xi)
+        rows.append((f"table6/input_{mb}MB", 0.0, f"ratio={ct.ratio():.3f}"))
+    return rows

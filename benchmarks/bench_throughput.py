@@ -1,0 +1,66 @@
+"""Paper Fig. 9: compression/decompression throughput.
+
+This container is CPU-only, so we report (a) measured CPU throughput of the
+jit'd XLA codec, (b) the TPU-v5e roofline *projection* for the Pallas
+kernels (bytes-moved / HBM bandwidth — the codec is elementwise/streamed,
+so HBM bandwidth is the binding resource), and (c) baseline CPU codecs.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BF16, FORMATS, codec, search_for_array
+from repro.data.synthetic_weights import PAPER_MODELS, generate
+
+from .common import time_fn, to_bytes
+
+HBM_BW = 819e9
+
+
+def _tpu_projection_gbps(fmt, p, n_elems=16384) -> tuple:
+    """Roofline projection: bytes in + bytes out per block / HBM bw."""
+    widths = codec.stream_shapes(n_elems, fmt, p)
+    comp_bytes = sum(widths.values()) + 4
+    raw_bytes = n_elems * fmt.total_bits // 8
+    # encode: read raw, write streams; decode: read streams, write raw
+    enc = raw_bytes + comp_bytes
+    dec = comp_bytes + raw_bytes
+    return (raw_bytes / enc * HBM_BW / 1e9, raw_bytes / dec * HBM_BW / 1e9)
+
+
+def run():
+    rows = []
+    for spec in PAPER_MODELS[:5] + PAPER_MODELS[5:6] + PAPER_MODELS[7:8]:
+        x = generate(spec)
+        fmt = FORMATS[spec.dtype]
+        host = np.asarray(jax.device_get(x))
+        p = search_for_array(host, fmt)
+        bits = codec.to_blocks(x, fmt)
+        nbytes = host.nbytes
+
+        enc = jax.jit(functools.partial(codec.encode_blocks, fmt=fmt, p=p))
+        streams = enc(bits)
+        t_enc = time_fn(enc, bits)
+        dec = jax.jit(functools.partial(codec.decode_blocks,
+                                        n_elems=bits.shape[1], fmt=fmt, p=p))
+        t_dec = time_fn(dec, streams)
+        proj_c, proj_d = _tpu_projection_gbps(fmt, p)
+        rows.append((f"fig9/enec_cpu_comp/{spec.name}", t_enc * 1e6,
+                     f"GBps={nbytes / t_enc / 1e9:.3f}"))
+        rows.append((f"fig9/enec_cpu_decomp/{spec.name}", t_dec * 1e6,
+                     f"GBps={nbytes / t_dec / 1e9:.3f}"))
+        rows.append((f"fig9/enec_tpu_roofline_comp/{spec.name}", 0.0,
+                     f"GBps={proj_c:.0f}"))
+        rows.append((f"fig9/enec_tpu_roofline_decomp/{spec.name}", 0.0,
+                     f"GBps={proj_d:.0f}"))
+        # deflate CPU baseline
+        raw = to_bytes(x)
+        t_z = time_fn(lambda b: zlib.compress(b, 1), raw, iters=2, warmup=0)
+        rows.append((f"fig9/deflate_cpu_comp/{spec.name}", t_z * 1e6,
+                     f"GBps={len(raw) / t_z / 1e9:.4f}"))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Table V (§VI-E): parameter transferability — apply the params
+searched on the DeepSeek-like set to the other BF16 sets without re-tuning;
+compression must stay lossless, ratio loss should be small."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import BF16, compress_array, decompress_array, search_for_array
+from repro.data.synthetic_weights import PAPER_MODELS, generate
+
+
+def run():
+    rows = []
+    source = next(s for s in PAPER_MODELS
+                  if s.name == "deepseek-llm-7b-base")
+    p_src = search_for_array(
+        np.asarray(jax.device_get(generate(source))), BF16)
+    for spec in PAPER_MODELS:
+        if spec.dtype != "bf16" or spec.name == source.name:
+            continue
+        x = generate(spec)
+        ct_t = compress_array(x, p_src)       # transferred (auto-widen ok)
+        ct_o = compress_array(x)              # optimal per-tensor search
+        y = decompress_array(ct_t)
+        lossless = bool((np.asarray(jax.device_get(x)).view(np.uint16)
+                         == np.asarray(jax.device_get(y)).view(np.uint16)
+                         ).all())
+        assert lossless, spec.name
+        drop = (ct_o.ratio() - ct_t.ratio()) / ct_o.ratio() * 100
+        rows.append((f"table5/transfer/{spec.name}", 0.0,
+                     f"transferred_CR={ct_t.ratio():.3f};optimal_CR="
+                     f"{ct_o.ratio():.3f};drop_pct={drop:.1f};"
+                     f"lossless={lossless}"))
+    return rows

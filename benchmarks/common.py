@@ -1,0 +1,50 @@
+"""Shared benchmark helpers: timing + the Deflate/ZipNN-style baselines the
+paper compares against (Table II rows NV_Deflate / ZipNN)."""
+from __future__ import annotations
+
+import time
+import zlib
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (fn must block or return jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def to_bytes(x) -> bytes:
+    return np.ascontiguousarray(np.asarray(jax.device_get(x))).tobytes()
+
+
+def deflate_ratio(x) -> float:
+    """General-purpose Deflate on the raw buffer (NV_Deflate analogue)."""
+    raw = to_bytes(x)
+    return len(raw) / len(zlib.compress(raw, 6))
+
+
+def zipnn_like_ratio(x) -> float:
+    """ZipNN-style: split exponent / sign+mantissa byte planes, Deflate the
+    exponent plane, store the rest raw (tail-separation baseline)."""
+    from repro.core.dtypes import format_for, split_fields, to_bits
+    import jax.numpy as jnp
+
+    fmt = format_for(x.dtype)
+    bits = to_bits(x)
+    exp, rawf = split_fields(bits, fmt)
+    exp_b = np.asarray(jax.device_get(exp)).astype(np.uint8).tobytes()
+    comp_exp = zlib.compress(exp_b, 6)
+    raw_bits = fmt.raw_bits
+    raw_bytes = (np.asarray(x).size * raw_bits + 7) // 8
+    total = len(comp_exp) + raw_bytes
+    return (np.asarray(x).size * fmt.total_bits / 8) / total

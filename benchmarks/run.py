@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Modules:
+  bench_ratio       Table II   (compression ratio, 10 datasets, baselines)
+  bench_throughput  Fig. 9     (CPU measured + TPU roofline projection)
+  bench_blocksize   Fig. 11/12 + Table VI (block/input size sweeps)
+  bench_ablation    Fig. 13    (V0 -> V3)
+  bench_params      Table IV   (searched params + Eq. 4 formula check)
+  bench_transfer    Table V    (parameter transferability)
+  bench_e2e         Fig. 10    (TTFT/TPOT dense vs ENEC-streamed + derived)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_ablation, bench_blocksize, bench_e2e, bench_params,
+                   bench_ratio, bench_throughput, bench_transfer)
+    modules = [bench_ratio, bench_throughput, bench_blocksize,
+               bench_ablation, bench_params, bench_transfer, bench_e2e]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{mod.__name__},ERROR,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Offline checkpoint (re)compression tool.
+
+    PYTHONPATH=src python examples/compress_checkpoint.py
+
+Builds a model state, saves it through the ENEC CheckpointManager, prints
+per-tensor and aggregate compression accounting, restores, and verifies the
+restore is bit-identical — the operational path a fleet uses to cut
+checkpoint storage/network bytes by ~1.35x for free.
+"""
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import dataclasses
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data.synthetic_weights import PAPER_MODELS, generate
+from repro.models import build_model
+from repro.optim import adamw
+
+
+def main():
+    # realistic-statistics weights so ratios match the paper (random-init
+    # smoke weights are narrower-spectrum)
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    # swap one big leaf for trained-like statistics
+    w = generate(dataclasses.replace(PAPER_MODELS[3], n_elems=1 << 21))
+    state = {"params": params, "realistic_block": w.reshape(1024, 2048),
+             "opt": adamw.init({"w": w[: 1 << 20]})}
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(Path(d), keep_last=2)
+        mgr.save(1234, state, blocking=True)
+        manifest = json.loads(
+            (Path(d) / "step_000000001234" / "manifest.json").read_text())
+        print(f"[ckpt] step {manifest['step']}: "
+              f"{manifest['raw_bytes']:,} B -> "
+              f"{manifest['compressed_bytes']:,} B "
+              f"(ratio {manifest['ratio']:.3f}x, "
+              f"{manifest['save_s']*1e3:.0f} ms)")
+        biggest = sorted(manifest["leaves"], key=lambda e: -e["bytes"])[:5]
+        for e in biggest:
+            print(f"   {e['name']:<40s} {e['mode']:<6s} {e['bytes']:>10,} B"
+                  + (f"  params={tuple(e['params'])}" if "params" in e
+                     else ""))
+        restored, _ = mgr.load(state)
+        for (pa, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(state)[0],
+                jax.tree_util.tree_flatten_with_path(restored)[0]):
+            np.testing.assert_array_equal(
+                np.asarray(a).reshape(-1).view(np.uint8),
+                np.asarray(b).reshape(-1).view(np.uint8), err_msg=str(pa))
+        print("[ckpt] restore verified bit-identical")
+
+
+if __name__ == "__main__":
+    main()

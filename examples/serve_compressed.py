@@ -1,0 +1,82 @@
+"""Batched serving with ENEC weight streaming (the paper's §VI-C scenario).
+
+Weights live ONLY in compressed form; each serve step decompresses
+layer-by-layer inside the jitted program (XLA overlaps stream DMA + decode
+of layer l+1 with layer l's compute).  Outputs are bit-identical to dense
+serving — ENEC is lossless.
+
+    PYTHONPATH=src python examples/serve_compressed.py --batch 4 --tokens 16
+"""
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.runtime.streaming import (compress_params_for_streaming,
+                                     decompress_sliced, stream_stats)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_smoke_config("qwen3_32b"),
+                              n_layers=4, d_model=256, n_heads=8,
+                              n_kv_heads=4, head_dim=32, d_ff=1024,
+                              vocab_size=4096, scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    streamed = compress_params_for_streaming(params, min_bytes=4096,
+                                             shards=2)
+    print("[serve] stream stats:", stream_stats(streamed))
+
+    rng = jax.random.key(1)
+    prompts = jax.random.randint(
+        rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    max_len = args.prompt_len + args.tokens
+
+    prefill = jax.jit(lambda p, b: model.prefill_fn(
+        p, b, max_len, decompressor=decompress_sliced))
+    decode = jax.jit(lambda p, c, t: model.decode_fn(
+        p, c, t, decompressor=decompress_sliced))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(streamed, {"tokens": prompts})
+    logits.block_until_ready()
+    ttft = time.perf_counter() - t0
+    # cross-check against dense weights: ENEC is lossless -> bit-identical
+    logits_dense, _ = jax.jit(lambda p, b: model.prefill_fn(p, b, max_len))(
+        params, {"tokens": prompts})
+    assert float(jnp.abs(logits_dense - logits).max()) == 0.0
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens - 1):
+        logits, cache = decode(streamed, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    tpot = (time.perf_counter() - t0) / max(args.tokens - 1, 1)
+
+    gen = jnp.stack(out_tokens, axis=1)
+    print(f"[serve] batch={args.batch} TTFT={ttft*1e3:.1f} ms "
+          f"TPOT={tpot*1e3:.1f} ms/token")
+    print("[serve] generated token ids (first sequence):",
+          gen[0].tolist())
+    print("[serve] streamed outputs verified bit-identical to dense weights")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""ENEC-compressed, fault-tolerant checkpointing.
+
+Layout (one directory per step):
+    <root>/step_000001230/
+        manifest.json          tree structure, shapes, dtypes, ENEC stats
+        t_<idx>.enec           one wire-format blob per tensor leaf
+    <root>/LATEST              atomic pointer file (rename-committed)
+
+Properties needed at 1000+ nodes:
+  * atomicity — write to ``.tmp-`` dir, fsync, rename; LATEST updated last;
+    a crash mid-save never corrupts the previous checkpoint;
+  * async     — saves run on a background thread over host copies, training
+    continues (wait() joins before the next save or at exit);
+  * elastic   — load() reshards to ANY mesh via device_put with the target
+    NamedShardings (topology can shrink/grow between runs);
+  * ~1.35x fewer bytes to the storage system via ENEC (per-tensor searched
+    params; raw escape keeps incompressible leaves at 1.0x, never worse);
+  * keep-last-k retention + best-effort corruption detection on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import api as enec_api
+from repro.core import wire as enec_wire
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "name",
+             getattr(k, "idx", k)))) for k in path) for path, _ in flat]
+    return names, [l for _, l in flat], treedef
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    root: Path
+    keep_last: int = 3
+    compress: bool = True
+    _thread: Optional[threading.Thread] = None
+
+    def __post_init__(self):
+        self.root = Path(self.root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # -- save ------------------------------------------------------------
+
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        if blocking:
+            self._save_host(step, host_tree)
+            return
+        self._thread = threading.Thread(
+            target=self._save_host, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _save_host(self, step: int, host_tree) -> None:
+        t0 = time.time()
+        names, leaves, treedef = _tree_paths(host_tree)
+        final = self.root / f"step_{step:012d}"
+        tmp = self.root / f".tmp-step_{step:012d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "leaves": [], "format": "enec-v1"}
+        raw_total = comp_total = 0
+        for i, (name, leaf) in enumerate(zip(names, leaves)):
+            leaf = np.asarray(leaf)
+            entry = {"name": name, "index": i, "shape": list(leaf.shape),
+                     "dtype": str(leaf.dtype)}
+            blob_path = tmp / f"t_{i:05d}.enec"
+            is_float = (leaf.dtype in (np.float32, np.float16)
+                        or str(leaf.dtype) == "bfloat16")
+            if self.compress and is_float:
+                ct = enec_api.compress_array(jax.numpy.asarray(leaf))
+                blob = enec_wire.to_wire(ct)
+                entry["mode"] = ct.mode
+                if ct.params is not None:
+                    entry["params"] = list(ct.params.astuple())
+            else:
+                blob = b"RAW0" + leaf.tobytes()
+                entry["mode"] = "npraw"
+            raw_total += leaf.nbytes
+            comp_total += len(blob)
+            entry["bytes"] = len(blob)
+            with open(blob_path, "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"].append(entry)
+        manifest["raw_bytes"] = raw_total
+        manifest["compressed_bytes"] = comp_total
+        manifest["ratio"] = raw_total / max(comp_total, 1)
+        manifest["save_s"] = round(time.time() - t0, 3)
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                       # atomic commit
+        latest_tmp = self.root / ".LATEST.tmp"
+        latest_tmp.write_text(final.name)
+        latest_tmp.rename(self.root / "LATEST")
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(p for p in self.root.glob("step_*") if p.is_dir())
+        for old in steps[: max(0, len(steps) - self.keep_last)]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # -- load ------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        ptr = self.root / "LATEST"
+        if not ptr.exists():
+            return None
+        return int(ptr.read_text().strip().split("_")[-1])
+
+    def load(self, like_tree, step: Optional[int] = None,
+             shardings=None):
+        """Restore into the structure of ``like_tree``; reshard to
+        ``shardings`` (elastic: any mesh) or keep host arrays."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {self.root}")
+        cdir = self.root / f"step_{step:012d}"
+        manifest = json.loads((cdir / "manifest.json").read_text())
+        names, leaves, treedef = _tree_paths(like_tree)
+        by_name = {e["name"]: e for e in manifest["leaves"]}
+        out = []
+        for name, like in zip(names, leaves):
+            e = by_name[name]
+            blob = (cdir / f"t_{e['index']:05d}.enec").read_bytes()
+            if e["mode"] == "npraw":
+                assert blob[:4] == b"RAW0", f"corrupt blob for {name}"
+                arr = np.frombuffer(blob[4:], dtype=np.dtype(e["dtype"]))
+                arr = arr.reshape(e["shape"])
+                val = jax.numpy.asarray(arr)
+            else:
+                ct = enec_wire.from_wire(blob)
+                val = enec_api.decompress_array(ct)
+            assert tuple(val.shape) == tuple(like.shape), \
+                f"{name}: ckpt {val.shape} vs model {like.shape}"
+            out.append(val.astype(like.dtype))
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, manifest

@@ -1,0 +1,16 @@
+"""ENEC core: the paper's contribution as a composable JAX module."""
+from .api import (CompressedTensor, abstract_compressed, compress_array,
+                  compress_tree, decompress_array, decompress_tree, tree_ratio)
+from .codec import BlockStreams, decode_blocks, encode_blocks
+from .dtypes import BF16, FORMATS, FP16, FP32, FloatFormat, format_for
+from .params import (DEFAULT_BLOCK_ELEMS, EnecParams, expected_ratio, search,
+                     search_for_array)
+
+__all__ = [
+    "CompressedTensor", "abstract_compressed", "compress_array",
+    "compress_tree", "decompress_array", "decompress_tree", "tree_ratio",
+    "BlockStreams", "decode_blocks", "encode_blocks",
+    "BF16", "FORMATS", "FP16", "FP32", "FloatFormat", "format_for",
+    "DEFAULT_BLOCK_ELEMS", "EnecParams", "expected_ratio", "search",
+    "search_for_array",
+]

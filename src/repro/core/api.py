@@ -1,0 +1,231 @@
+"""Public ENEC API: compress/decompress arrays and pytrees.
+
+``CompressedTensor`` is a registered pytree, so compressed weights flow
+through ``jax.jit`` / ``pjit`` / shardings like any other parameters — this
+is what makes weight-streaming serving and compressed checkpointing
+first-class citizens of the framework rather than host-side tools.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import codec, params as params_mod
+from .codec import BlockStreams
+from .dtypes import FORMATS, FloatFormat, format_for
+from .params import DEFAULT_BLOCK_ELEMS, EnecParams
+
+HEADER_BYTES = 48  # nominal per-tensor wire header for ratio accounting
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressedTensor:
+    """ENEC-compressed view of one tensor.
+
+    mode == "enec": ``streams`` carries the block streams.
+    mode == "raw":  ``raw_bytes`` carries the original buffer (escape for
+    incompressible / non-float tensors — ratio floor of ~1.0).
+    Leading ``shards`` dimension on every stream makes per-device placement
+    trivial: shard axis 0 over the TP axis and each device owns its blocks.
+    """
+    streams: Optional[BlockStreams]
+    raw_bytes: Optional[jax.Array]
+    # -- static metadata -------------------------------------------------
+    fmt_name: str = dataclasses.field(metadata=dict(static=True))
+    params: Optional[EnecParams] = dataclasses.field(metadata=dict(static=True))
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+    dtype_str: str = dataclasses.field(metadata=dict(static=True))
+    block_elems: int = dataclasses.field(metadata=dict(static=True))
+    shards: int = dataclasses.field(metadata=dict(static=True))
+    mode: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def fmt(self) -> FloatFormat:
+        return FORMATS[self.fmt_name]
+
+    @property
+    def nblocks(self) -> int:
+        return self.streams.mask.shape[0] * (self.shards or 1) if self.mode == "enec" else 0
+
+    def nbytes_device(self) -> int:
+        """Bytes of the padded device layout."""
+        leaves = jax.tree_util.tree_leaves(
+            self.streams if self.mode == "enec" else self.raw_bytes)
+        return sum(l.size * l.dtype.itemsize for l in leaves)
+
+    def nbytes_wire(self) -> int:
+        """Exact compressed size (paper's file-based accounting)."""
+        if self.mode == "const":
+            return jnp.dtype(self.dtype_str).itemsize + HEADER_BYTES
+        if self.mode == "raw":
+            return int(np.prod(self.shape)) * jnp.dtype(self.dtype_str).itemsize + HEADER_BYTES
+        s = self.streams
+        fixed = (s.mask.size + s.low.size + s.raw.size)
+        true_high = int(np.ceil(np.asarray(jax.device_get(s.high_len), np.int64).sum() / 8))
+        nblocks = int(np.prod(s.mask.shape[:-1]))  # per-block high length: 4B each
+        return fixed + true_high + 4 * nblocks + HEADER_BYTES
+
+    def nbytes_raw(self) -> int:
+        return int(np.prod(self.shape)) * jnp.dtype(self.dtype_str).itemsize
+
+    def ratio(self) -> float:
+        return self.nbytes_raw() / max(self.nbytes_wire(), 1)
+
+
+def _is_supported_float(x) -> bool:
+    return jnp.asarray(x).dtype in (jnp.bfloat16, jnp.float16, jnp.float32)
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=512)
+def _jit_encode(fmt_name: str, p: EnecParams):
+    fmt = FORMATS[fmt_name]
+    return jax.jit(lambda bits: codec.encode_blocks(bits, fmt, p))
+
+
+def compress_array(x, p: Optional[EnecParams] = None,
+                   block_elems: int = DEFAULT_BLOCK_ELEMS,
+                   shards: int = 1) -> CompressedTensor:
+    """Compress one array. ``p=None`` searches parameters on the host."""
+    x = jnp.asarray(x)
+    if not _is_supported_float(x):
+        return _raw_tensor(x, shards)
+    fmt = format_for(x.dtype)
+    host = np.asarray(jax.device_get(x))
+    # constant-tensor escape (RZE-style, LC framework §II-C): fresh optimizer
+    # moments / padding tensors are all one value — store it once.
+    flat_host = np.ascontiguousarray(host).view(fmt.np_uint_dtype).reshape(-1)
+    if flat_host.size and (flat_host == flat_host[0]).all():
+        return CompressedTensor(
+            streams=None,
+            raw_bytes=jnp.asarray(flat_host[:1]).view(jnp.uint8),
+            fmt_name=fmt.name, params=None, shape=tuple(x.shape),
+            dtype_str=str(x.dtype), block_elems=block_elems, shards=shards,
+            mode="const")
+    if p is None:
+        p = params_mod.search_for_array(host, fmt, block_elems=block_elems)
+    else:
+        # transferred params: widen if this tensor's range escapes (lossless
+        # guarantee, DESIGN.md §2.iii)
+        bits = np.ascontiguousarray(host).view(fmt.np_uint_dtype)
+        exp = (bits >> fmt.mant_bits) & fmt.exp_mask
+        if exp.size:
+            p = params_mod.widen_for_range(p, int(exp.min()), int(exp.max()))
+    bits = codec.to_blocks(x, fmt, block_elems)
+    nblocks = bits.shape[0]
+    if shards > 1:
+        if nblocks % shards:
+            extra = (-nblocks) % shards
+            bits = jnp.concatenate(
+                [bits, jnp.zeros((extra, block_elems), bits.dtype)])
+            nblocks += extra
+        bits = bits.reshape(shards * (nblocks // shards), block_elems)
+    streams = _jit_encode(fmt.name, p)(bits)
+    if shards > 1:
+        streams = jax.tree.map(
+            lambda a: a.reshape((shards, a.shape[0] // shards) + a.shape[1:]),
+            streams)
+    ct = CompressedTensor(
+        streams=streams, raw_bytes=None, fmt_name=fmt.name, params=p,
+        shape=tuple(x.shape), dtype_str=str(x.dtype), block_elems=block_elems,
+        shards=shards, mode="enec")
+    if ct.nbytes_wire() >= ct.nbytes_raw():
+        return _raw_tensor(x, shards)  # incompressible: raw escape
+    return ct
+
+
+def _raw_tensor(x, shards: int) -> CompressedTensor:
+    flat = jnp.ravel(x)
+    buf = flat.view(jnp.uint8) if flat.dtype != jnp.uint8 else flat
+    return CompressedTensor(
+        streams=None, raw_bytes=buf, fmt_name="bf16", params=None,
+        shape=tuple(x.shape), dtype_str=str(jnp.asarray(x).dtype),
+        block_elems=0, shards=shards, mode="raw")
+
+
+def decompress_array(ct: CompressedTensor):
+    """Exact inverse of :func:`compress_array` (jit-compatible)."""
+    dtype = jnp.dtype(ct.dtype_str)
+    if ct.mode == "const":
+        value = ct.raw_bytes.view(dtype)[0]
+        return jnp.broadcast_to(value, ct.shape)
+    if ct.mode == "raw":
+        return ct.raw_bytes.view(dtype).reshape(ct.shape)
+    streams = ct.streams
+    if ct.shards > 1:
+        streams = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), streams)
+    bits = codec.decode_blocks(streams, ct.block_elems, ct.fmt, ct.params)
+    return codec.from_blocks(bits, ct.shape, ct.fmt)
+
+
+# ---------------------------------------------------------------------------
+# pytree-level API
+# ---------------------------------------------------------------------------
+
+def compress_tree(tree, shared_params: Optional[EnecParams] = None,
+                  block_elems: int = DEFAULT_BLOCK_ELEMS, shards: int = 1):
+    """Compress every leaf; float leaves get per-tensor searched params
+    (or ``shared_params`` for the paper's transferability mode)."""
+    return jax.tree.map(
+        lambda x: compress_array(x, shared_params, block_elems, shards), tree)
+
+
+def decompress_tree(ctree):
+    return jax.tree.map(
+        decompress_array, ctree,
+        is_leaf=lambda x: isinstance(x, CompressedTensor))
+
+
+def tree_ratio(ctree) -> dict:
+    """Aggregate compression accounting over a compressed pytree."""
+    cts = [c for c in jax.tree.leaves(
+        ctree, is_leaf=lambda x: isinstance(x, CompressedTensor))
+        if isinstance(c, CompressedTensor)]
+    raw = sum(c.nbytes_raw() for c in cts)
+    wire = sum(c.nbytes_wire() for c in cts)
+    return {
+        "tensors": len(cts),
+        "raw_bytes": raw,
+        "compressed_bytes": wire,
+        "ratio": raw / max(wire, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# abstract (ShapeDtypeStruct) compressed weights — used by the dry-run
+# ---------------------------------------------------------------------------
+
+def abstract_compressed(shape, dtype, p: EnecParams,
+                        block_elems: int = DEFAULT_BLOCK_ELEMS,
+                        shards: int = 1) -> CompressedTensor:
+    """Build a CompressedTensor of ShapeDtypeStructs (no allocation) matching
+    what :func:`compress_array` would produce — lets ``jit(...).lower`` see
+    the exact compressed layout for the production dry-run."""
+    fmt = format_for(dtype)
+    size = 1
+    for s in shape:
+        size *= s
+    nblocks = (size + block_elems - 1) // block_elems
+    nblocks += (-nblocks) % shards
+    widths = codec.stream_shapes(block_elems, fmt, p)
+    lead = (shards, nblocks // shards) if shards > 1 else (nblocks,)
+    sds = jax.ShapeDtypeStruct
+    streams = BlockStreams(
+        mask=sds(lead + (widths["mask"],), jnp.uint8),
+        low=sds(lead + (widths["low"],), jnp.uint8),
+        high=sds(lead + (widths["high"],), jnp.uint8),
+        high_len=sds(lead, jnp.int32),
+        raw=sds(lead + (widths["raw"],), jnp.uint8),
+    )
+    return CompressedTensor(
+        streams=streams, raw_bytes=None, fmt_name=fmt.name, params=p,
+        shape=tuple(shape), dtype_str=str(jnp.dtype(dtype)),
+        block_elems=block_elems, shards=shards, mode="enec")

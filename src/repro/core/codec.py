@@ -1,0 +1,139 @@
+"""ENEC block codec (paper §IV-B basic design + §V optimizations), pure JAX.
+
+A tensor is flattened, zero-padded to a multiple of the 16,384-element block
+size, and encoded block-by-block:
+
+  exponent --linear map--> y --group (L)--> 1-bit anomaly mask per group
+  low  stream: low ``m`` bits of EVERY element        (fixed length)
+  high stream: high ``n-m`` bits of anomalous groups  (block-level variable,
+               stored rank-ordered & zero-padded to its static bound)
+  raw  stream: sign|mantissa lanes                    (fixed length)
+
+Only block-level variability remains (the key ENEC idea) — every array here
+has a static shape, so the codec jits, shards and Pallas-lowers cleanly.
+
+This module is the *reference* path (also used on CPU); the Pallas kernels
+in ``repro.kernels`` implement the same layout for the TPU hot path and are
+verified against this module element-for-element.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bitio, transform
+from .dtypes import FloatFormat, combine_fields, split_fields
+from .params import DEFAULT_BLOCK_ELEMS, EnecParams
+
+
+class BlockStreams(NamedTuple):
+    """Static-shape per-block streams for one tensor (leading dim = blocks)."""
+    mask: jax.Array      # (B, G/8)  uint8 — per-group anomaly bits
+    low: jax.Array       # (B, packed(N, m)) uint8
+    high: jax.Array      # (B, packed(N, n-m)) uint8 — rank-ordered, padded
+    high_len: jax.Array  # (B,) int32 — true high-stream length in BITS
+    raw: jax.Array       # (B, packed(N, raw_bits)) uint8
+
+
+def stream_shapes(n_elems: int, fmt: FloatFormat, p: EnecParams):
+    """Static byte widths of each stream for an N-element block."""
+    g = n_elems // p.L
+    return {
+        "mask": g // 8,
+        "low": bitio.packed_nbytes(n_elems, p.m),
+        "high": bitio.packed_nbytes(n_elems, p.n - p.m),
+        "raw": bitio.packed_nbytes(n_elems, fmt.raw_bits),
+    }
+
+
+def encode_blocks(bits, fmt: FloatFormat, p: EnecParams) -> BlockStreams:
+    """bits: (B, N) unsigned int view of the floats. Shapes static in (N, p)."""
+    nblocks, n = bits.shape
+    g = n // p.L
+    assert n % p.L == 0 and g % 8 == 0, (n, p.L)
+
+    exp, raw = split_fields(bits, fmt)
+    y = transform.forward(exp.astype(jnp.uint16), p.b, p.n)  # (B, N), < 2**n
+
+    yg = y.reshape(nblocks, g, p.L)
+    # §V-B: bitwise-OR replaces reduction-max — group is anomalous iff any
+    # element has a bit at position >= m.
+    gor = jax.lax.reduce(yg, jnp.uint16(0), jnp.bitwise_or, (2,))
+    anom = (gor >> p.m) != 0  # (B, G)
+
+    mask = bitio.pack_bool_mask(anom)
+
+    low = bitio.pack_fixed(y & jnp.uint16((1 << p.m) - 1), p.m)
+
+    # Rank-ordered dense scatter of anomalous groups' high bits.  Non-anomalous
+    # groups have y >> m == 0 everywhere, so their (colliding) writes into the
+    # overflow row G are all zeros — deterministic by construction.
+    rank = jnp.cumsum(anom, axis=1, dtype=jnp.int32) - anom.astype(jnp.int32)
+    target = jnp.where(anom, rank, g)  # (B, G)
+    y_high = (yg >> p.m).astype(jnp.uint16)  # (B, G, L)
+    batch_ix = jnp.arange(nblocks, dtype=jnp.int32)[:, None]
+    high_dense = (
+        jnp.zeros((nblocks, g + 1, p.L), jnp.uint16)
+        .at[batch_ix, target].set(y_high)[:, :g]
+    )
+    high = bitio.pack_fixed(high_dense.reshape(nblocks, n), p.n - p.m)
+    high_len = (jnp.sum(anom, axis=1, dtype=jnp.int32) * (p.L * (p.n - p.m)))
+
+    rawp = bitio.pack_fixed(raw, fmt.raw_bits)
+    return BlockStreams(mask=mask, low=low, high=high, high_len=high_len, raw=rawp)
+
+
+def decode_blocks(streams: BlockStreams, n_elems: int, fmt: FloatFormat,
+                  p: EnecParams):
+    """Inverse of :func:`encode_blocks` -> (B, N) unsigned int view."""
+    nblocks = streams.mask.shape[0]
+    g = n_elems // p.L
+
+    anom = bitio.unpack_bool_mask(streams.mask, g)  # (B, G)
+    # Prefix sum over the mask — the paper's IDD-Scan target (§V-D).  The
+    # Pallas kernel computes this with the MXU triangular-matmul scan; the
+    # reference uses cumsum.
+    rank = jnp.cumsum(anom, axis=1, dtype=jnp.int32) - anom.astype(jnp.int32)
+
+    y_low = bitio.unpack_fixed(streams.low, n_elems, p.m).reshape(nblocks, g, p.L)
+    high_dense = bitio.unpack_fixed(streams.high, n_elems, p.n - p.m)
+    high_dense = high_dense.reshape(nblocks, g, p.L)
+
+    # Reverse gather (paper Alg. 1 line 21): group g reads rank[g]'s row.
+    gathered = jnp.take_along_axis(high_dense, rank[:, :, None], axis=1)
+    gathered = jnp.where(anom[:, :, None], gathered, jnp.uint16(0))
+
+    y = (y_low | (gathered << p.m)).reshape(nblocks, n_elems)
+    exp = transform.inverse(y, p.b, p.n, p.l)
+
+    raw = bitio.unpack_fixed(streams.raw, n_elems, fmt.raw_bits,
+                             out_dtype=fmt.uint_dtype)
+    return combine_fields(exp.astype(fmt.uint_dtype), raw, fmt)
+
+
+# ---------------------------------------------------------------------------
+# whole-array helpers (flatten / pad / reshape to blocks)
+# ---------------------------------------------------------------------------
+
+def pad_count(size: int, block_elems: int = DEFAULT_BLOCK_ELEMS) -> int:
+    return (-size) % block_elems
+
+
+def to_blocks(x, fmt: FloatFormat, block_elems: int = DEFAULT_BLOCK_ELEMS):
+    """float array -> (B, N) bits with zero padding."""
+    flat = jnp.ravel(x)
+    pad = pad_count(flat.size, block_elems)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, flat.dtype)])
+    bits = flat.view(fmt.uint_dtype)
+    return bits.reshape(-1, block_elems)
+
+
+def from_blocks(bits, shape, fmt: FloatFormat):
+    size = 1
+    for s in shape:
+        size *= s
+    flat = bits.reshape(-1).view(fmt.float_dtype)[:size]
+    return flat.reshape(shape)

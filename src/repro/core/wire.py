@@ -1,0 +1,143 @@
+"""Exact packed wire/file format for ENEC-compressed tensors (host side).
+
+The device layout pads the per-block high stream to its static bound so XLA
+sees fixed shapes; the wire layout stores the *exact* bits (the paper's
+file-based accounting).  This module converts between the two.  numpy only —
+it runs on the checkpoint/host path, never inside jit.
+
+Layout per tensor (little endian):
+  magic  u32 = 0xE47C0DEC
+  mode   u8 (0=enec, 1=raw), fmt u8, reserved u16
+  ndim u32, shape i64[ndim], dtype tag u8[8]
+  block_elems u32, shards u32
+  params: b i32, n i32, m i32, L i32, l i32  (enec mode)
+  nblocks u32
+  high_len u32[nblocks]            (bits)
+  mask | low | raw                 (fixed-size streams, concatenated)
+  high                             (exact bit stream, byte padded per block)
+"""
+from __future__ import annotations
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitio, codec
+from .api import CompressedTensor
+from .codec import BlockStreams
+from .dtypes import FORMATS
+from .params import EnecParams
+
+MAGIC = 0xE47C0DEC
+_FMT_TAGS = {"bf16": 0, "fp16": 1, "fp32": 2}
+_FMT_FROM_TAG = {v: k for k, v in _FMT_TAGS.items()}
+
+
+def _flat_streams(ct: CompressedTensor) -> BlockStreams:
+    s = ct.streams
+    if ct.shards > 1:
+        s = jax.tree.map(
+            lambda a: np.asarray(jax.device_get(a)).reshape(
+                (a.shape[0] * a.shape[1],) + a.shape[2:]), s)
+    else:
+        s = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), s)
+    return s
+
+
+_MODE_TAGS = {"enec": 0, "raw": 1, "const": 2}
+
+
+def to_wire(ct: CompressedTensor) -> bytes:
+    out = [struct.pack("<IBBH", MAGIC, _MODE_TAGS[ct.mode],
+                       _FMT_TAGS[ct.fmt_name], 0)]
+    out.append(struct.pack("<I", len(ct.shape)))
+    out.append(np.asarray(ct.shape, np.int64).tobytes())
+    out.append(struct.pack("<8s", ct.dtype_str.encode()[:8]))
+    out.append(struct.pack("<II", ct.block_elems, ct.shards))
+    if ct.mode in ("raw", "const"):
+        out.append(np.asarray(jax.device_get(ct.raw_bytes), np.uint8).tobytes())
+        return b"".join(out)
+
+    p = ct.params
+    out.append(struct.pack("<5i", p.b, p.n, p.m, p.L, p.l))
+    s = _flat_streams(ct)
+    nblocks = s.mask.shape[0]
+    out.append(struct.pack("<I", nblocks))
+    out.append(np.asarray(s.high_len, np.uint32).tobytes())
+    out.append(s.mask.tobytes())
+    out.append(s.low.tobytes())
+    out.append(s.raw.tobytes())
+    # exact high stream: per block, unpack the padded device form and re-pack
+    # only the true values with straight bit concatenation
+    width = p.n - p.m
+    if width:
+        n_elems = ct.block_elems
+        dense = np.asarray(
+            jax.device_get(bitio.unpack_fixed(jnp.asarray(s.high), n_elems, width)))
+        for blk in range(nblocks):
+            count = int(s.high_len[blk]) // width
+            out.append(bitio.np_pack_bits_exact(dense[blk, :count], width))
+    return b"".join(out)
+
+
+def from_wire(buf: bytes) -> CompressedTensor:
+    off = 0
+    magic, mode, fmt_tag, _ = struct.unpack_from("<IBBH", buf, off); off += 8
+    assert magic == MAGIC, "bad ENEC wire magic"
+    (ndim,) = struct.unpack_from("<I", buf, off); off += 4
+    shape = tuple(np.frombuffer(buf, np.int64, ndim, off).tolist()); off += 8 * ndim
+    (dtype_raw,) = struct.unpack_from("<8s", buf, off); off += 8
+    dtype_str = dtype_raw.rstrip(b"\x00").decode()
+    block_elems, shards = struct.unpack_from("<II", buf, off); off += 8
+    if mode in (1, 2):
+        raw = jnp.asarray(np.frombuffer(buf, np.uint8, -1, off))
+        return CompressedTensor(
+            streams=None, raw_bytes=raw,
+            fmt_name=_FMT_FROM_TAG.get(fmt_tag, "bf16"), params=None,
+            shape=shape, dtype_str=dtype_str, block_elems=block_elems,
+            shards=shards, mode="raw" if mode == 1 else "const")
+
+    fmt = FORMATS[_FMT_FROM_TAG[fmt_tag]]
+    b, n, m, L, l = struct.unpack_from("<5i", buf, off); off += 20
+    p = EnecParams(b=b, n=n, m=m, L=L, l=l)
+    (nblocks,) = struct.unpack_from("<I", buf, off); off += 4
+    high_len = np.frombuffer(buf, np.uint32, nblocks, off).astype(np.int32)
+    off += 4 * nblocks
+    widths = codec.stream_shapes(block_elems, fmt, p)
+
+    def take(nb):
+        nonlocal off
+        arr = np.frombuffer(buf, np.uint8, nblocks * nb, off).reshape(nblocks, nb)
+        off += nblocks * nb
+        return arr
+
+    mask = take(widths["mask"])
+    low = take(widths["low"])
+    raw = take(widths["raw"])
+    width = p.n - p.m
+    dense = np.zeros((nblocks, block_elems), np.uint16)
+    if width:
+        for blk in range(nblocks):
+            nbytes = (int(high_len[blk]) + 7) // 8
+            count = int(high_len[blk]) // width
+            dense[blk, :count] = bitio.np_unpack_bits_exact(
+                buf[off : off + nbytes], count, width)
+            off += nbytes
+    high = np.asarray(jax.device_get(
+        bitio.pack_fixed(jnp.asarray(dense), width)))
+
+    def reshard(a):
+        a = jnp.asarray(a)
+        if shards > 1:
+            a = a.reshape((shards, a.shape[0] // shards) + a.shape[1:])
+        return a
+
+    streams = BlockStreams(
+        mask=reshard(mask), low=reshard(low), high=reshard(high),
+        high_len=reshard(high_len), raw=reshard(raw))
+    return CompressedTensor(
+        streams=streams, raw_bytes=None, fmt_name=fmt.name, params=p,
+        shape=shape, dtype_str=dtype_str, block_elems=block_elems,
+        shards=shards, mode="enec")

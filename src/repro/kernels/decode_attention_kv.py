@@ -1,0 +1,150 @@
+"""Fused decode attention over an ENEC-compressed KV cache (beyond paper).
+
+§Perf hillclimb 1 found that at decode_32k x batch-128 the dominant HBM
+traffic is the KV cache (2.1 GB/device/step), not the weights the paper
+streams.  KV activations have the same skewed-exponent statistics as
+weights (§III applies; cf. the paper's citation [23] on K/V compression),
+so ENEC's codec carries over — *if* decompression happens in VMEM on the
+attention's critical path, never materializing the dense cache in HBM.
+
+Layout: the frozen prefix of the cache is compressed per (batch, kv_head,
+128-token chunk); with head_dim=128 one chunk = 128x128 = 16,384 elements
+= exactly one ENEC block (the paper's preferred block size doubles as the
+attention tile).  The kernel runs a flash-decoding pass: grid
+(batch*kv_head, chunk); each step ENEC-decodes one K tile and one V tile
+into VMEM, updates running (m, l, acc) in scratch, and emits o = acc/l at
+the last chunk.  HBM reads: compressed streams (~1/1.35 of dense) + q.
+The decode step's in-flight tail (tokens since the last seal) stays raw
+and is handled by the caller in plain JAX.
+
+Oracle: decompress-then-attend in ref.py; tests sweep shapes and GQA
+group sizes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import codec
+from repro.core.codec import BlockStreams
+from repro.core.dtypes import BF16, from_bits
+from repro.core.params import EnecParams
+
+from .enec_decode import decode_block_body
+
+TOK = 128          # tokens per compressed chunk
+HD = 128           # head_dim (chunk = TOK*HD = one ENEC block)
+BLOCK_ELEMS = TOK * HD
+
+
+def compress_kv_prefix(kv, p: EnecParams):
+    """kv: (B, S, KV, hd) bf16, S % 128 == 0, hd == 128 ->
+    BlockStreams with leading dims (B, KV, S/128).
+
+    NOTE: ``p`` must cover BOTH the K and V tensors' exponent ranges
+    (search on a concatenated sample, or use ``widen_for_range``) — this
+    low-level path does not auto-widen like ``compress_array``."""
+    from repro.core import encode_blocks
+
+    b, s, n_kv, hd = kv.shape
+    assert hd == HD and s % TOK == 0, (s, hd)
+    tiles = kv.transpose(0, 2, 1, 3).reshape(b * n_kv * (s // TOK),
+                                             BLOCK_ELEMS)
+    bits = tiles.view(BF16.uint_dtype)
+    streams = codec.encode_blocks(bits, BF16, p)
+    return jax.tree.map(
+        lambda a: a.reshape((b, n_kv, s // TOK) + a.shape[1:]), streams)
+
+
+def _kernel(qr, km, kl, kh, kr, vm, vl, vh, vr, o_ref, acc, m_sc, l_sc, *,
+            p, grp, scale):
+    c = pl.program_id(1)
+    n_c = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, -1e30)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    k_bits = decode_block_body(km[0, 0, 0], kl[0, 0, 0], kh[0, 0, 0],
+                               kr[0, 0, 0], n_elems=BLOCK_ELEMS, fmt=BF16,
+                               p=p)
+    v_bits = decode_block_body(vm[0, 0, 0], vl[0, 0, 0], vh[0, 0, 0],
+                               vr[0, 0, 0], n_elems=BLOCK_ELEMS, fmt=BF16,
+                               p=p)
+    k_tile = from_bits(k_bits, BF16).reshape(TOK, HD)
+    v_tile = from_bits(v_bits, BF16).reshape(TOK, HD)
+
+    q = qr[0, 0]                                       # (grp, hd)
+    scores = jax.lax.dot_general(
+        q.astype(jnp.float32), k_tile.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # (grp, TOK)
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    prob = jnp.exp(scores - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * corr + prob.sum(axis=-1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        prob, v_tile.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(c == n_c - 1)
+    def _emit():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_sc[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_kv_enec(q, k_streams: BlockStreams,
+                             v_streams: BlockStreams, p: EnecParams, *,
+                             interpret: bool = True):
+    """q: (B, KV, grp, hd) -> o (B, KV, grp, hd).
+
+    K/V prefix supplied as ENEC BlockStreams of shape (B, KV, C, bytes)
+    from :func:`compress_kv_prefix`.  Attention over the full prefix
+    (flash-decoding streaming softmax)."""
+    b, n_kv, grp, hd = q.shape
+    n_chunks = k_streams.mask.shape[2]
+    widths = codec.stream_shapes(BLOCK_ELEMS, BF16, p)
+    scale = 1.0 / math.sqrt(hd)
+
+    def sspec(nbytes):
+        return pl.BlockSpec((1, 1, 1, max(nbytes, 1)),
+                            lambda i, c: (i // n_kv, i % n_kv, c, 0))
+
+    def strm_specs():
+        return [sspec(widths["mask"]), sspec(widths["low"]),
+                sspec(widths["high"]), sspec(widths["raw"])]
+
+    qspec = pl.BlockSpec((1, 1, grp, hd),
+                         lambda i, c: (i // n_kv, i % n_kv, 0, 0))
+
+    def pad_high(s):
+        if widths["high"] == 0:
+            z = jnp.zeros(s.mask.shape[:3] + (1,), jnp.uint8)
+            return s._replace(high=z)
+        return s
+
+    ks, vs = pad_high(k_streams), pad_high(v_streams)
+    fn = pl.pallas_call(
+        functools.partial(_kernel, p=p, grp=grp, scale=scale),
+        grid=(b * n_kv, n_chunks),
+        in_specs=[qspec] + strm_specs() + strm_specs(),
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, grp, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((grp, hd), jnp.float32),   # acc
+            pltpu.VMEM((grp, 1), jnp.float32),    # running max
+            pltpu.VMEM((grp, 1), jnp.float32),    # running sum
+        ],
+        interpret=interpret,
+    )
+    return fn(q, ks.mask, ks.low, ks.high, ks.raw,
+              vs.mask, vs.low, vs.high, vs.raw)

@@ -1,0 +1,99 @@
+"""Fused ENEC-decompress + GEMM Pallas kernel (beyond-paper, DESIGN.md §8).
+
+Decode-phase LLM inference is weight-bandwidth bound: every step streams the
+full weight matrix HBM -> VMEM for a tiny number of MACs.  Storing weights
+ENEC-compressed in HBM and decompressing *inside* the matmul kernel's VMEM
+tiles raises effective HBM bandwidth by the compression ratio (~1.35x for
+BF16) — the TPU analogue of the paper's CPU->NPU transfer win, one level
+down the memory hierarchy.  Decompressed weights never exist in HBM.
+
+Tiling: the weight matrix (K, N) is cut into 128x128 tiles; one tile
+(16,384 elements) == exactly one ENEC block, so the paper's preferred block
+size doubles as the MXU-aligned tile.  Grid (N/128, K/128), K innermost;
+each step decodes one block into VMEM and feeds the MXU, accumulating into
+the (M, 128) output tile.
+
+Oracle: decompress-then-matmul in pure jnp (ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import codec
+from repro.core.api import CompressedTensor
+from repro.core.dtypes import FloatFormat, from_bits
+from repro.core.params import EnecParams
+
+from .enec_decode import decode_block_body
+
+TILE = 128
+BLOCK_ELEMS = TILE * TILE  # one ENEC block == one MXU weight tile
+
+
+def tile_weights_for_fusion(w, p: EnecParams) -> CompressedTensor:
+    """Compress a (K, N) weight matrix tile-wise for the fused kernel.
+
+    Block t = (n_tile * K/128 + k_tile) holds that 128x128 tile row-major.
+    """
+    from repro.core.api import compress_array  # local to avoid cycle
+    k, n = w.shape
+    assert k % TILE == 0 and n % TILE == 0, (k, n)
+    tiles = w.reshape(k // TILE, TILE, n // TILE, TILE)
+    # (n_tiles, k_tiles, TILE(k), TILE(n)) then flatten per tile row-major
+    tiles = tiles.transpose(2, 0, 1, 3).reshape(-1)
+    ct = compress_array(tiles, p, block_elems=BLOCK_ELEMS)
+    assert ct.mode == "enec", "fused kernel requires enec mode"
+    return ct
+
+
+def _fused_kernel(mask_ref, low_ref, high_ref, raw_ref, x_ref, o_ref, *,
+                  fmt, p, k_tiles):
+    k = pl.program_id(1)
+    bits = decode_block_body(
+        mask_ref[0], low_ref[0], high_ref[0], raw_ref[0],
+        n_elems=BLOCK_ELEMS, fmt=fmt, p=p)
+    w_tile = from_bits(bits, fmt).reshape(TILE, TILE).astype(jnp.float32)
+    part = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_tile,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def decompress_matmul(x, ct: CompressedTensor, k: int, n: int, *,
+                      interpret: bool = True):
+    """out = x @ W where W (k, n) is stored only in ENEC-compressed form."""
+    m = x.shape[0]
+    assert x.shape[1] == k and k % TILE == 0 and n % TILE == 0
+    k_tiles, n_tiles = k // TILE, n // TILE
+    fmt, p = ct.fmt, ct.params
+    widths = codec.stream_shapes(BLOCK_ELEMS, fmt, p)
+    s = ct.streams
+
+    def wspec(nbytes):
+        # weight-stream tile t = n_tile * k_tiles + k_tile
+        return pl.BlockSpec((1, nbytes), lambda ni, ki: (ni * k_tiles + ki, 0))
+
+    fn = pl.pallas_call(
+        functools.partial(_fused_kernel, fmt=fmt, p=p, k_tiles=k_tiles),
+        grid=(n_tiles, k_tiles),
+        in_specs=[
+            wspec(widths["mask"]), wspec(widths["low"]),
+            wspec(widths["high"]), wspec(widths["raw"]),
+            pl.BlockSpec((m, TILE), lambda ni, ki: (0, ki)),
+        ],
+        out_specs=pl.BlockSpec((m, TILE), lambda ni, ki: (0, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(s.mask, s.low, s.high, s.raw, x)

@@ -1,0 +1,89 @@
+"""IDD-Scan: intra-segment dependency-decoupled prefix sum (paper §V-D), TPU.
+
+The paper's problem: Ascend AIV forbids SIMD ops between elements inside one
+32-byte segment, so a flat prefix sum is "locked".  Their fix: transpose so
+intra-row dependencies become inter-row ones, log-step scan, transpose back,
+then propagate row offsets hierarchically.
+
+TPU VPU has the same shape of constraint — cross-LANE shifts inside a vreg
+are expensive, while full-register ops and the MXU are cheap.  The adaptation
+(DESIGN.md §2): move the lane-axis dependency into the *matrix unit*:
+
+  stage 1 (intra-row):  row_incl = M @ U, with U the (128,128) upper-
+                        triangular ones matrix — a single MXU op replaces
+                        log2(128) cross-lane shuffles.
+  stage 2 (inter-row):  log-step scan over the sublane axis (cheap full-
+                        register adds, identical to the paper's stage 2),
+                        broadcast the exclusive row offsets, add.
+
+Values are exact in f32 for sums < 2**24 — our masks sum to <= G <= 4096.
+
+Kernel: ``idd_scan`` computes inclusive prefix sums along the flattened
+(rows*128) axis for every batch row, tiled one batch element per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _upper_triangular(k: int, dtype=jnp.float32):
+    r = jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)
+    return (r <= c).astype(dtype)
+
+
+def scan_2d(mat):
+    """Inclusive prefix sum of a (rows, LANE) f32 matrix flattened row-major.
+
+    Pure jnp building block, shared by the standalone kernel and the ENEC
+    decode kernel body (both trace it inside Pallas).
+    """
+    rows, lane = mat.shape
+    # stage 1: intra-row inclusive scan on the MXU
+    u = _upper_triangular(lane, mat.dtype)
+    row_incl = jax.lax.dot_general(
+        mat, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    # stage 2: hierarchical inter-row propagation (paper stage 2, log2(rows))
+    totals = row_incl[:, lane - 1 :]  # (rows, 1) inclusive row sums
+    offs = totals
+    k = 1
+    while k < rows:
+        shifted = jnp.pad(offs, ((k, 0), (0, 0)))[:rows]
+        offs = offs + shifted
+        k *= 2
+    excl = jnp.pad(offs, ((1, 0), (0, 0)))[:rows]  # exclusive row offsets
+    return row_incl + excl
+
+
+def exclusive_from_inclusive(incl, orig):
+    return incl - orig
+
+
+def _idd_scan_kernel(x_ref, o_ref, *, rows):
+    mat = x_ref[0].astype(jnp.float32).reshape(rows, LANE)
+    o_ref[0] = scan_2d(mat).reshape(rows * LANE).astype(o_ref.dtype)
+
+
+def idd_scan(x, *, interpret: bool = True):
+    """Batched inclusive prefix sum: x (B, N) -> (B, N) int32, N % 128 == 0.
+
+    One batch row per grid step; the (rows, 128) working set lives in VMEM.
+    """
+    b, n = x.shape
+    assert n % LANE == 0, n
+    rows = n // LANE
+    fn = pl.pallas_call(
+        functools.partial(_idd_scan_kernel, rows=rows),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=interpret,
+    )
+    return fn(x.astype(jnp.int32) if x.dtype == jnp.bool_ else x)

@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else they run under
+``interpret=True`` (Pallas executes the kernel body in Python/XLA on CPU),
+which is how this container validates them.  ``use_pallas=False`` falls back
+to the pure-jnp reference path — the serving runtime uses that switch so the
+same model code runs on any backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.api import CompressedTensor
+from repro.core.dtypes import FloatFormat
+from repro.core.params import EnecParams
+
+from . import ref
+from .decompress_matmul import decompress_matmul as _fused
+from .decompress_matmul import tile_weights_for_fusion  # re-export  # noqa: F401
+from .enec_decode import decode_blocks_pallas
+from .enec_encode import encode_blocks_pallas
+from .idd_scan import idd_scan as _idd_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def idd_scan(x, use_pallas: bool = True):
+    """Batched inclusive prefix sum (B, N) -> (B, N) int32."""
+    if not use_pallas:
+        return ref.idd_scan_ref(x)
+    return _idd_scan(x, interpret=_interpret())
+
+
+def encode_blocks(bits, fmt: FloatFormat, p: EnecParams,
+                  use_pallas: bool = True) -> codec.BlockStreams:
+    if not use_pallas:
+        return ref.encode_blocks_ref(bits, fmt, p)
+    return encode_blocks_pallas(bits, fmt, p, interpret=_interpret())
+
+
+def decode_blocks(streams: codec.BlockStreams, n_elems: int,
+                  fmt: FloatFormat, p: EnecParams,
+                  use_pallas: bool = True):
+    if not use_pallas:
+        return ref.decode_blocks_ref(streams, n_elems, fmt, p)
+    return decode_blocks_pallas(streams, n_elems, fmt, p,
+                                interpret=_interpret())
+
+
+def decompress_matmul(x, ct: CompressedTensor, k: int, n: int,
+                      use_pallas: bool = True):
+    """x @ W with W resident only in ENEC-compressed form."""
+    if not use_pallas:
+        return ref.decompress_matmul_ref(x, ct, k, n)
+    return _fused(x, ct, k, n, interpret=_interpret())

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests).
+
+Each function mirrors the exact signature/layout of its kernel counterpart
+in ops.py; tests sweep shapes/dtypes/params and assert element-exact
+equality (these are *lossless* codecs — allclose with atol=0).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.api import CompressedTensor, decompress_array
+from repro.core.dtypes import FloatFormat
+from repro.core.params import EnecParams
+
+
+def idd_scan_ref(x):
+    """Inclusive prefix sum along the last axis, int32."""
+    return jnp.cumsum(x.astype(jnp.int32), axis=-1, dtype=jnp.int32)
+
+
+def encode_blocks_ref(bits, fmt: FloatFormat, p: EnecParams):
+    return codec.encode_blocks(bits, fmt, p)
+
+
+def decode_blocks_ref(streams, n_elems: int, fmt: FloatFormat, p: EnecParams):
+    return codec.decode_blocks(streams, n_elems, fmt, p)
+
+
+def decompress_matmul_ref(x, ct: CompressedTensor, k: int, n: int):
+    """Decompress-then-matmul, the semantic the fused kernel must match."""
+    from .decompress_matmul import TILE
+    k_tiles, n_tiles = k // TILE, n // TILE
+    flat = decompress_array(ct)
+    tiles = flat.reshape(n_tiles, k_tiles, TILE, TILE)
+    w = tiles.transpose(1, 2, 0, 3).reshape(k, n)
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)

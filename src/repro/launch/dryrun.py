@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any jax import (device count locks on
+# first init).  512 placeholder host devices back the production meshes:
+# 16x16 single pod and 2x16x16 multi-pod.
+os.environ.setdefault("REPRO_DRYRUN", "1")  # keep bf16 dots in lowered HLO
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape) cell this driver
+
+  1. builds the step function for the cell kind (train_step for train_4k,
+     serve prefill/decode steps for the inference shapes),
+  2. ``jax.jit(step, in_shardings, out_shardings).lower(**input_specs)``
+     on the production mesh and ``.compile()``s it — sharding mismatches,
+     compile-time OOM or unsupported collectives fail here,
+  3. prints ``compiled.memory_analysis()`` / ``cost_analysis()`` and writes
+     a JSON record (results/dryrun/<cell>.json) with the roofline terms'
+     raw inputs, including collective bytes parsed from the HLO.
+
+Scan-correction protocol: models whose layer stack is lowered as lax.scan
+have loop bodies counted once by cost_analysis; we additionally lower
+1-period and 0-period variants and extrapolate
+``cost = p0 + n_periods * (p1 - p0)`` (exact for homogeneous stacks).
+Models with <= 18 periods are fully unrolled instead (exact by
+construction).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multi-pod-only|--single-only]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, shape_applicable)
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.registry import (abstract_params, active_param_count,
+                                   cache_specs, input_specs, param_count)
+from repro.optim import adamw
+from repro.runtime import sharding
+from repro.runtime.steps import (build_decode_step, build_prefill_step,
+                                 build_train_step)
+
+UNROLL_MAX_PERIODS = 18
+
+
+def _periods(cfg) -> int:
+    from repro.models.lm import block_program
+    if cfg.is_encdec:
+        return cfg.n_layers
+    return cfg.n_layers // len(block_program(cfg))
+
+
+def _with_periods(cfg, n: int):
+    from repro.models.lm import block_program
+    if cfg.is_encdec:
+        return dataclasses.replace(cfg, n_layers=n, encoder_layers=n)
+    return dataclasses.replace(cfg, n_layers=n * len(block_program(cfg)))
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in dir(mem):
+        if attr.startswith("_"):
+            continue
+        try:
+            v = getattr(mem, attr)
+        except Exception:
+            continue
+        if isinstance(v, (int, float)):
+            out[attr] = v
+    return out
+
+
+def _cost_dict(cost) -> dict:
+    keys = ("flops", "transcendentals", "bytes accessed",
+            "bytes accessedout{}")
+    return {k: float(cost[k]) for k in keys if k in cost}
+
+
+def lower_cell(cfg, shape, mesh, *, compile_=True, variant="baseline"):
+    """Build + lower (+ compile) one cell on one mesh. Returns stats dict.
+
+    variant="streamed": serve with ENEC-compressed weights resident
+    (StreamedWeight pytree + in-step decompression) — the paper's §VI-C
+    deployment, lowered for the production mesh."""
+    model = build_model(cfg)
+    decompressor = None
+    if variant == "streamed":
+        from repro.core.params import EnecParams
+        from repro.runtime import streaming
+        p_enec = EnecParams(b=122, n=6, m=3, L=16, l=96)  # Table IV params
+        params_abs = streaming.abstract_streamed_params(cfg, p_enec)
+        decompressor = streaming.decompress_sliced
+    else:
+        params_abs = abstract_params(cfg)
+
+    def named(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    smode = "train" if shape.kind == "train" else "serve"
+    if variant.startswith(("ep_contract", "ep_a2a")) and shape.kind != "train":
+        smode = "serve_ep"
+    pspecs = named(sharding.param_pspecs(params_abs, mesh, mode=smode))
+    specs = input_specs(cfg, shape)
+    bspecs = named(sharding.batch_pspecs(specs, mesh, shape.global_batch))
+    scalar = NamedSharding(mesh, P())
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        opt_specs = adamw.AdamWState(
+            step=scalar, m=pspecs, v=jax.tree.map(lambda s: s, pspecs))
+        step = build_train_step(model, adamw.AdamWConfig())
+        metrics_specs = {"loss": scalar, "nll": scalar, "aux": scalar,
+                         "grad_norm": scalar, "lr": scalar}
+        fn = jax.jit(step,
+                     in_shardings=(pspecs, opt_specs, bspecs),
+                     out_shardings=(pspecs, opt_specs, metrics_specs),
+                     donate_argnums=(0, 1))  # in-place params/opt update
+        lowered = fn.lower(params_abs, opt_abs, specs)
+    elif shape.kind == "prefill":
+        if decompressor is not None:
+            def step(params, batch):
+                return model.prefill_fn(params, batch, shape.seq_len,
+                                        decompressor=decompressor)
+        else:
+            step = build_prefill_step(model, max_len=shape.seq_len)
+        cspecs = named(sharding.cache_pspecs(
+            cache_specs(cfg, shape.global_batch, shape.seq_len), mesh,
+            shape.global_batch))
+        lspec = named(sharding.logits_pspec(mesh, shape.global_batch,
+                                            cfg.vocab_size))
+        fn = jax.jit(step, in_shardings=(pspecs, bspecs),
+                     out_shardings=(lspec, cspecs))
+        lowered = fn.lower(params_abs, specs)
+    else:  # decode
+        if decompressor is not None:
+            def step(params, cache, tokens):
+                return model.decode_fn(params, cache, tokens,
+                                       decompressor=decompressor)
+        else:
+            step = build_decode_step(model)
+        cache_abs = specs["cache"]
+        cspecs = named(sharding.cache_pspecs(cache_abs, mesh,
+                                             shape.global_batch))
+        tok_spec = named(P(sharding.batch_axis(mesh, shape.global_batch)))
+        lspec = named(sharding.logits_pspec(mesh, shape.global_batch,
+                                            cfg.vocab_size))
+        fn = jax.jit(step, in_shardings=(pspecs, cspecs, tok_spec),
+                     out_shardings=(lspec, cspecs),
+                     donate_argnums=(1,))  # in-place KV-cache update
+        lowered = fn.lower(params_abs, cache_abs, specs["tokens"])
+    t_lower = time.time() - t0
+
+    rec = {"lower_s": round(t_lower, 2)}
+    if not compile_:
+        return rec, lowered, None
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    cost = compiled.cost_analysis()
+    rec["cost"] = _cost_dict(cost)
+    rec["memory"] = _mem_dict(compiled.memory_analysis())
+    rec["collectives"] = hlo_stats.collective_stats(compiled.as_text())
+    return rec, lowered, compiled
+
+
+VARIANT_TWEAKS = {
+    "baseline": {},
+    "streamed": {},
+    "remat_dots": {"remat_policy": "dots"},
+    "bf16_combine": {"moe_combine_dtype": "bf16"},
+    "ep_contract": {},
+    "ep_contract_bf16": {"moe_combine_dtype": "bf16"},
+    "ep_a2a": {"moe_dispatch_a2a": True},
+    "flash_decode": {"decode_score_shard": True},
+    "attn_chunk_full": {"attn_chunk": 1 << 20},  # single-pass softmax attn
+}
+
+
+def run_cell(arch: str, shape_name: str, outdir: Path, multi_pod_modes,
+             layers_mode: str = "auto", variant: str = "baseline",
+             mesh_shape=None) -> dict:
+    cfg = get_config(arch)
+    if variant in VARIANT_TWEAKS and VARIANT_TWEAKS[variant]:
+        cfg = dataclasses.replace(cfg, **VARIANT_TWEAKS[variant])
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape_name)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "params": param_count(cfg), "active_params": active_param_count(cfg),
+        "n_periods": _periods(cfg),
+    }
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        _write(outdir, arch, shape_name, record)
+        print(f"[dryrun] {arch} x {shape_name}: {reason}")
+        return record
+
+    unroll = (layers_mode == "unroll" or
+              (layers_mode == "auto" and _periods(cfg) <= UNROLL_MAX_PERIODS))
+    cfg_full = dataclasses.replace(cfg, scan_layers=not unroll,
+                                   remat=(shape.kind == "train"))
+    record["layers_mode"] = "unroll" if unroll else "scan"
+
+    record["variant"] = variant
+    for mesh_name in multi_pod_modes:
+        if mesh_shape is not None:
+            import jax as _jax
+            mesh = _jax.make_mesh(tuple(mesh_shape), ("data", "model"))
+        else:
+            mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        entry = {}
+        try:
+            with mesh:
+                rec, lowered, compiled = lower_cell(cfg_full, shape, mesh,
+                                                    variant=variant)
+                entry["full"] = rec
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+                      f"compiled in {rec['compile_s']}s  "
+                      f"flops={rec['cost'].get('flops'):.3e}")
+                mem = rec["memory"]
+                print("  memory_analysis:",
+                      json.dumps({k: v for k, v in sorted(mem.items())
+                                  if "size" in k or "bytes" in k}))
+                print("  cost_analysis:", json.dumps(rec["cost"]))
+                # scan-correction lowers (single-pod only, cheap shapes)
+                if not unroll and mesh_name == "single":
+                    for n_p, key in ((1, "p1"), (0, "p0")):
+                        cfg_v = dataclasses.replace(
+                            _with_periods(cfg_full, n_p))
+                        rec_v, _, _ = lower_cell(cfg_v, shape, mesh,
+                                                 variant=variant)
+                        entry[key] = rec_v
+                entry["status"] = "ok"
+        except Exception as e:  # noqa: BLE001 — record the failure verbatim
+            entry["status"] = "failed"
+            entry["error"] = f"{type(e).__name__}: {e}"
+            entry["traceback"] = traceback.format_exc()[-4000:]
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name} FAILED: "
+                  f"{entry['error']}")
+        record[mesh_name] = entry
+    record["status"] = ("ok" if all(
+        record.get(m, {}).get("status") == "ok" for m in multi_pod_modes)
+        else "failed")
+    suffix = shape_name if variant == "baseline" else f"{shape_name}__{variant}"
+    if mesh_shape is not None:
+        suffix += "__mesh" + "x".join(map(str, mesh_shape))
+    _write(outdir, arch, suffix, record)
+    return record
+
+
+def _write(outdir: Path, arch: str, shape_name: str, record: dict):
+    outdir.mkdir(parents=True, exist_ok=True)
+    path = outdir / f"{arch}__{shape_name}.json"
+    existing = {}
+    if path.exists():
+        try:
+            existing = json.loads(path.read_text())
+        except Exception:
+            existing = {}
+    existing.update(record)
+    path.write_text(json.dumps(existing, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--layers", default="auto",
+                    choices=("auto", "scan", "unroll"))
+    ap.add_argument("--variant", default="baseline",
+                    choices=("baseline", "streamed", "remat_dots",
+                             "bf16_combine", "ep_contract",
+                             "ep_contract_bf16", "ep_a2a",
+                             "flash_decode", "attn_chunk_full"))
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override single-pod mesh, e.g. 4x64")
+    ap.add_argument("--single-only", action="store_true")
+    ap.add_argument("--multi-only", action="store_true")
+    args = ap.parse_args()
+
+    modes = ["single", "multi"]
+    if args.single_only:
+        modes = ["single"]
+    if args.multi_only:
+        modes = ["multi"]
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    outdir = Path(args.out)
+    failures = 0
+    mesh_shape = None
+    if args.mesh_shape:
+        mesh_shape = tuple(int(v) for v in args.mesh_shape.split("x"))
+    for arch in archs:
+        for shape_name in shapes:
+            rec = run_cell(arch, shape_name, outdir, modes, args.layers,
+                           variant=args.variant, mesh_shape=mesh_shape)
+            failures += rec.get("status") == "failed"
+    print(f"[dryrun] done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

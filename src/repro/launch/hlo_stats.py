@@ -1,0 +1,111 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+cost_analysis() has no collective accounting, so we regex the compiled
+module: for every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute we take the instruction's result shape and replica-group
+size and convert to *per-device bytes on the wire* with the standard ring
+formulas:
+
+  all-reduce          2 * (n-1)/n * bytes
+  all-gather              (n-1)/n * bytes          (result bytes)
+  reduce-scatter          (n-1)   * bytes          (result bytes; operand = n*result)
+  all-to-all              (n-1)/n * bytes
+  collective-permute               bytes
+
+While-loop bodies appear once in the text — the caller applies the same
+period-count correction as for FLOPs (launch/roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=...
+_INSTR_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+
+_TUPLE_INSTR_RE = re.compile(
+    r"=\s*\(((?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?(?:,\s*)?)+)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype, 4)
+    for d in dims.split(","):
+        if d:
+            size *= int(d)
+    return size
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2  # conservative default
+
+
+def wire_bytes(kind: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * result_bytes
+    if kind == "all-gather":
+        return (n - 1) / n * result_bytes
+    if kind == "reduce-scatter":
+        return float(n - 1) * result_bytes
+    if kind == "all-to-all":
+        return (n - 1) / n * result_bytes
+    return float(result_bytes)  # collective-permute
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """-> {kind: {count, result_bytes, wire_bytes}} + totals."""
+    stats = defaultdict(lambda: {"count": 0, "result_bytes": 0,
+                                 "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-done" in line or "-update" in line:
+            continue  # async pair: count the -start only
+        m = _INSTR_RE.search(line)
+        shapes = []
+        kind = None
+        if m:
+            kind = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_INSTR_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                shapes = _SHAPE_RE.findall(mt.group(1))
+        if not kind:
+            continue
+        rb = sum(_shape_bytes(d, s) for d, s in shapes)
+        n = _group_size(line)
+        stats[kind]["count"] += 1
+        stats[kind]["result_bytes"] += rb
+        stats[kind]["wire_bytes"] += wire_bytes(kind, rb, n)
+    out = {k: dict(v) for k, v in stats.items()}
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for v in stats.values())
+    out["total_count"] = sum(v["count"] for v in stats.values())
+    return out

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic re-mesh / tests)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1D 'data' mesh (examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

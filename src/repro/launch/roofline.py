@@ -1,0 +1,236 @@
+"""Roofline analysis (deliverable g) over the dry-run artifacts.
+
+Per (arch x shape) cell on the single-pod 16x16 mesh, derive the three
+terms (seconds, per chip):
+
+    compute    = HLO_FLOPs / 197e12            (bf16 peak, v5e)
+    memory     = HLO_bytes / 819e9              (HBM bandwidth)
+    collective = wire_bytes / 50e9              (ICI per-link)
+
+Sources: compiled.cost_analysis() for FLOPs/bytes; collective wire bytes
+parsed from the compiled HLO (launch/hlo_stats.py).  The compiled module is
+the per-device SPMD program, so all numbers are already per chip.
+
+Corrections (documented; raw + corrected both recorded):
+ 1. scan-counted-once: for lax.scan layer stacks, cost = p0 + P*(p1 - p2=p0)
+    from the 0/1-period lowers (exact for homogeneous stacks).
+ 2. recurrent time-scan bodies (Mamba / mLSTM / sLSTM state updates) are
+    also counted once; we add the analytic per-step FLOPs x (T-1):
+      mamba:  6*B*d_inner*d_state        per layer-step
+      mlstm:  6*B*H*hd^2                 per layer-step
+      slstm:  8*B*D^2 (recurrent matmul) + 16*B*D   per layer-step
+    These are <1% for Jamba (projections dominate) and ~15-40% for xLSTM.
+
+MODEL_FLOPS: 6*N*tokens (train, dense), 6*N_active*tokens (train, MoE),
+2*N(_active)*tokens (prefill/decode).  The MODEL_FLOPS/HLO_FLOPs ratio
+exposes remat/dispatch/redundancy overhead.
+
+Roofline fraction (the §Perf score):
+    T_ideal  = max(model_compute_s, model_min_bytes_s)
+    fraction = T_ideal / max(compute_s, memory_s, collective_s)
+where model_min_bytes is the traffic that MUST move per step (weights once
++ KV/state once for decode; params*3 + 2-pass activations for train).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.models.registry import active_param_count, param_count
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+CHIPS = 256                  # single pod
+
+MESH_DATA, MESH_MODEL = 16, 16
+
+
+def _corrected(entry: dict, key_path, n_periods: int) -> float:
+    """cost = p0 + P*(p1 - p0); falls back to full when unrolled."""
+    def get(rec):
+        v = rec
+        for k in key_path:
+            v = v.get(k, 0.0) if isinstance(v, dict) else 0.0
+        return float(v or 0.0)
+
+    full = get(entry["full"])
+    if "p1" not in entry or "p0" not in entry:
+        return full
+    p1, p0 = get(entry["p1"]), get(entry["p0"])
+    body = max(p1 - p0, 0.0)
+    return p0 + n_periods * body
+
+
+def _recurrent_correction_flops(cfg, shape) -> float:
+    """Analytic scan-body FLOPs (per device) for SSM/xLSTM time scans."""
+    if shape.kind == "decode":
+        return 0.0  # single step: counted exactly
+    b_dev = max(shape.global_batch // MESH_DATA, 1)
+    t = shape.seq_len
+    total = 0.0
+    if cfg.family == "hybrid":
+        d_inner = 2 * cfg.d_model
+        n_mamba = cfg.n_layers * 7 // 8
+        total += 6.0 * b_dev * d_inner * cfg.ssm_state * t * n_mamba
+    if cfg.family == "ssm":
+        hd = cfg.d_model // cfg.n_heads
+        n_m = cfg.n_layers * 3 // 4
+        n_s = cfg.n_layers - n_m
+        total += 6.0 * b_dev * cfg.n_heads * hd * hd * t * n_m
+        total += (8.0 * b_dev * cfg.d_model * cfg.d_model
+                  + 16.0 * b_dev * cfg.d_model) * t * n_s
+    if shape.kind == "train":
+        total *= 3.0  # fwd + bwd(2x) through the recurrence
+    return total
+
+
+def model_flops_per_device(cfg, shape) -> float:
+    n = param_count(cfg)
+    n_act = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens / CHIPS
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens / CHIPS
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_act * tokens / CHIPS
+
+
+def model_min_bytes_per_device(cfg, shape, *, weight_ratio: float = 1.0) -> float:
+    """Bytes that must cross HBM per step per chip (ideal lower bound).
+
+    weight_ratio > 1 models ENEC-compressed weight residency (the §Perf
+    beyond-paper lever: decode reads weights/ratio bytes)."""
+    n = param_count(cfg)
+    wbytes = 2.0 * n / CHIPS / weight_ratio
+    if shape.kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / MESH_DATA
+        act = 4.0 * tokens_dev * cfg.d_model * cfg.n_layers / MESH_MODEL
+        return 12.0 * n / CHIPS + act            # p+g+opt r/w (bf16+f32)
+    if shape.kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / MESH_DATA
+        kv = (2.0 * tokens_dev * cfg.n_kv_heads * cfg.head_dim_() * 2
+              * cfg.n_layers / MESH_MODEL)
+        return wbytes + kv
+    # decode: weights once + full KV/state read once
+    if cfg.family in ("ssm",):
+        kv_bytes = 0.0
+    else:
+        attn_layers = (cfg.n_layers // 8 if cfg.family == "hybrid"
+                       else cfg.n_layers)
+        kv_elems = (shape.global_batch * shape.seq_len * cfg.n_kv_heads
+                    * cfg.head_dim_() * 2 * attn_layers)
+        kv_bytes = 2.0 * kv_elems / CHIPS
+    return wbytes + kv_bytes
+
+
+def analyze_cell(rec: dict, *, weight_ratio: float = 1.0) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    entry = rec.get("single", {})
+    if rec.get("status") == "skipped":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": "skipped", "reason": rec.get("reason", "")}
+    if entry.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": "failed",
+                "error": entry.get("error", "missing")}
+
+    n_p = rec.get("n_periods", 1)
+    flops = _corrected(entry, ("cost", "flops"), n_p)
+    bytes_ = _corrected(entry, ("cost", "bytes accessed"), n_p)
+    wire = _corrected(entry, ("collectives", "total_wire_bytes"), n_p)
+    rec_fl = _recurrent_correction_flops(cfg, shape)
+    flops_corr = flops + rec_fl
+
+    compute_s = flops_corr / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    coll_s = wire / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops_per_device(cfg, shape)
+    ideal = max(mf / PEAK_FLOPS,
+                model_min_bytes_per_device(cfg, shape,
+                                           weight_ratio=weight_ratio)
+                / HBM_BW)
+    frac = ideal / max(terms.values()) if max(terms.values()) else 0.0
+
+    suggestions = {
+        ("compute_s", "train"): "reduce remat recompute / larger microbatch",
+        ("compute_s", "prefill"): "fuse attention chunks; drop f32 upcasts",
+        ("compute_s", "decode"): "decode is tiny-FLOP; check for replicated compute",
+        ("memory_s", "train"): "tighter remat policy; fuse optimizer update",
+        ("memory_s", "prefill"): "avoid score materialization; bf16 intermediates",
+        ("memory_s", "decode"): "ENEC-compressed weight residency (+fused decode-GEMM)",
+        ("collective_s", "train"): "overlap FSDP all-gathers; reduce-scatter grads",
+        ("collective_s", "prefill"): "resharding copies (SPMD warnings) — align KV layouts",
+        ("collective_s", "decode"): "shard KV seq axis; combine EP all-reduce into a2a",
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "layers_mode": rec.get("layers_mode"),
+        "flops_hlo": flops, "flops_recurrent_corr": rec_fl,
+        "flops": flops_corr, "bytes": bytes_, "wire_bytes": wire,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / flops_corr if flops_corr else 0.0,
+        "roofline_fraction": round(frac, 4),
+        "suggestion": suggestions[(dominant, shape.kind)],
+        "multi_pod_ok": rec.get("multi", {}).get("status") == "ok",
+        "peak_hbm_gb": round(entry["full"]["memory"]
+                             .get("peak_memory_in_bytes", 0) / 2**30, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--weight-ratio", type=float, default=1.0,
+                    help="ENEC weight-residency ratio for the ideal bound")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(Path(args.dryrun_dir).glob("*.json")):
+        rec = json.loads(path.read_text())
+        # §Perf variant artifacts (…__streamed.json etc.) are compared in
+        # EXPERIMENTS.md §Perf; the baseline table stays variant-free.
+        if rec.get("variant", "baseline") != "baseline" \
+                or "__mesh" in path.stem or len(path.stem.split("__")) > 2:
+            continue
+        rows.append(analyze_cell(rec, weight_ratio=args.weight_ratio))
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+
+    # markdown table
+    md = ["| arch | shape | mode | compute_s | memory_s | collective_s | "
+          "dominant | MODEL/HLO | roofline_frac | peakHBM(GB) | multi-pod |",
+          "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            md.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                      f"— | — | — | {r['reason']} |")
+            continue
+        if r["status"] == "failed":
+            md.append(f"| {r['arch']} | {r['shape']} | FAILED | — | — | — |"
+                      f" — | — | — | — | {r['error'][:60]} |")
+            continue
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['layers_mode']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant'][:-2]}** "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} "
+            f"| {r['peak_hbm_gb']} | {'Y' if r['multi_pod_ok'] else 'N'} |")
+    table = "\n".join(md)
+    Path(args.out).with_suffix(".md").write_text(table)
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures behind one functional interface."""
+from .registry import build_model, Model  # noqa: F401

@@ -1,0 +1,194 @@
+"""Encoder-decoder backbone (whisper-tiny).  The conv audio frontend is a
+STUB per the assignment: ``input_specs()`` feeds precomputed frame
+embeddings (B, T_audio, D); this module implements the transformer backbone
+(bidirectional encoder, causal decoder with self+cross attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (ACT_DTYPE, attention_block, attention_decode_block,
+                     cross_attention_block, cross_memory, cross_entropy,
+                     dense_init, embed_init, embed_tokens, init_attention,
+                     init_cross_attention, init_mlp, lm_logits, mlp_block,
+                     rms_norm)
+from .lm import attn_shape
+
+
+def init_params(key, cfg):
+    ks = jax.random.split(key, 6)
+    s = attn_shape(cfg)
+    n_enc, n_dec = cfg.encoder_layers, cfg.n_layers
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"pre_norm": jnp.zeros((cfg.d_model,), ACT_DTYPE),
+                "attn": init_attention(k1, s),
+                "post_norm": jnp.zeros((cfg.d_model,), ACT_DTYPE),
+                "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"pre_norm": jnp.zeros((cfg.d_model,), ACT_DTYPE),
+                "attn": init_attention(k1, s),
+                "xnorm": jnp.zeros((cfg.d_model,), ACT_DTYPE),
+                "xattn": init_cross_attention(k2, s),
+                "post_norm": jnp.zeros((cfg.d_model,), ACT_DTYPE),
+                "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff)}
+
+    enc = [enc_layer(jax.random.fold_in(ks[0], i)) for i in range(n_enc)]
+    dec = [dec_layer(jax.random.fold_in(ks[1], i)) for i in range(n_dec)]
+    return {
+        "enc_stack": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_stack": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model)),
+        "enc_norm": jnp.zeros((cfg.d_model,), ACT_DTYPE),
+        "final_norm": jnp.zeros((cfg.d_model,), ACT_DTYPE),
+        "head": dense_init(ks[3], (cfg.d_model, cfg.vocab_size)),
+    }
+
+
+def _enc_layer_fwd(p, cfg, x, positions):
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    out, _ = attention_block(p["attn"], h, attn_shape(cfg), positions,
+                             cfg.rope_theta, causal=False)
+    x = x + out
+    x = x + mlp_block(p["mlp"], rms_norm(x, p["post_norm"], cfg.norm_eps),
+                      activation="gelu")
+    return x
+
+
+def _dec_layer_fwd(p, cfg, x, memory_kv, positions):
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    out, kv = attention_block(p["attn"], h, attn_shape(cfg), positions,
+                              cfg.rope_theta, causal=True)
+    x = x + out
+    x = x + cross_attention_block(
+        p["xattn"], rms_norm(x, p["xnorm"], cfg.norm_eps), memory_kv,
+        attn_shape(cfg))
+    x = x + mlp_block(p["mlp"], rms_norm(x, p["post_norm"], cfg.norm_eps),
+                      activation="gelu")
+    return x, kv
+
+
+def encode(params, cfg, frames):
+    """frames: (B, T_a, D) precomputed embeddings -> encoder output."""
+    x = frames.astype(ACT_DTYPE)
+    positions = jnp.arange(x.shape[1])[None, :]
+    if cfg.scan_layers and cfg.encoder_layers > 1:
+        def body(x, sl):
+            return _enc_layer_fwd(sl, cfg, x, positions), None
+        x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    else:
+        for i in range(cfg.encoder_layers):
+            sl = jax.tree.map(lambda a: a[i], params["enc_stack"])
+            x = _enc_layer_fwd(sl, cfg, x, positions)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, cfg, enc_out, tokens):
+    """Teacher-forced decoder forward -> logits (B, T, V)."""
+    x = embed_tokens(params["embed"], tokens)
+    positions = jnp.arange(x.shape[1])[None, :]
+    s = attn_shape(cfg)
+
+    if cfg.scan_layers and cfg.n_layers > 1:
+        def body(x, sl):
+            memory = cross_memory(sl["xattn"], enc_out, s)
+            x, _ = _dec_layer_fwd(sl, cfg, x, memory, positions)
+            return x, None
+        x, _ = jax.lax.scan(body, x, params["dec_stack"])
+    else:
+        for i in range(cfg.n_layers):
+            sl = jax.tree.map(lambda a: a[i], params["dec_stack"])
+            memory = cross_memory(sl["xattn"], enc_out, s)
+            x, _ = _dec_layer_fwd(sl, cfg, x, memory, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(x, params["head"])
+
+
+def loss_fn(params, cfg, batch):
+    enc_out = encode(params, cfg, batch["frames"])
+    logits = decode_train(params, cfg, enc_out, batch["tokens"])
+    loss = cross_entropy(logits[:, :-1], batch["targets"][:, 1:])
+    return loss, {"nll": loss, "aux": jnp.float32(0)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int):
+    s = attn_shape(cfg)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, s.n_kv_heads,
+                        s.head_dim), ACT_DTYPE),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, s.n_kv_heads,
+                        s.head_dim), ACT_DTYPE),
+        "mem_k": jnp.zeros((cfg.n_layers, batch, enc_len, s.n_kv_heads,
+                            s.head_dim), ACT_DTYPE),
+        "mem_v": jnp.zeros((cfg.n_layers, batch, enc_len, s.n_kv_heads,
+                            s.head_dim), ACT_DTYPE),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, cfg, frames, tokens, max_len: int):
+    """Encoder pass + decoder prompt pass; build self+cross caches."""
+    enc_out = encode(params, cfg, frames)
+    s = attn_shape(cfg)
+    b, t = tokens.shape
+    cache = init_cache(cfg, b, max_len, enc_out.shape[1])
+    x = embed_tokens(params["embed"], tokens)
+    positions = jnp.arange(t)[None, :]
+    for i in range(cfg.n_layers):
+        sl = jax.tree.map(lambda a: a[i], params["dec_stack"])
+        memory = cross_memory(sl["xattn"], enc_out, s)
+        cache["mem_k"] = cache["mem_k"].at[i].set(memory[0])
+        cache["mem_v"] = cache["mem_v"].at[i].set(memory[1])
+        x, kv = _dec_layer_fwd(sl, cfg, x, memory, positions)
+        cache["k"] = cache["k"].at[i, :, :t].set(kv[0])
+        cache["v"] = cache["v"].at[i, :, :t].set(kv[1])
+    cache["lengths"] = jnp.full((b,), t, jnp.int32)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(x[:, -1:], params["head"])[:, 0], cache
+
+
+def decode_step(params, cfg, cache, tokens):
+    """One decoder token. tokens: (B,)."""
+    s = attn_shape(cfg)
+    x = embed_tokens(params["embed"], tokens[:, None])
+    lengths = cache["lengths"]
+
+    def body(x, sl):
+        p, c = sl
+        h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+        out, kv = attention_decode_block(p["attn"], h, s, (c["k"], c["v"]),
+                                         lengths, cfg.rope_theta)
+        x = x + out
+        x = x + cross_attention_block(
+            p["xattn"], rms_norm(x, p["xnorm"], cfg.norm_eps),
+            (c["mem_k"], c["mem_v"]), s)
+        x = x + mlp_block(p["mlp"], rms_norm(x, p["post_norm"], cfg.norm_eps),
+                          activation="gelu")
+        return x, {"k": kv[0], "v": kv[1]}
+
+    if cfg.scan_layers and cfg.n_layers > 1:
+        percache = {"k": cache["k"], "v": cache["v"],
+                    "mem_k": cache["mem_k"], "mem_v": cache["mem_v"]}
+        x, new_kv = jax.lax.scan(body, x, (params["dec_stack"], percache))
+        cache = dict(cache, k=new_kv["k"], v=new_kv["v"],
+                     lengths=lengths + 1)
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            sl = (jax.tree.map(lambda a: a[i], params["dec_stack"]),
+                  {"k": cache["k"][i], "v": cache["v"][i],
+                   "mem_k": cache["mem_k"][i], "mem_v": cache["mem_v"][i]})
+            x, kv = body(x, sl)
+            ks.append(kv["k"]); vs.append(kv["v"])
+        cache = dict(cache, k=jnp.stack(ks), v=jnp.stack(vs),
+                     lengths=lengths + 1)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(x, params["head"])[:, 0], cache

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts FFN with top-k token-choice routing.
+
+Dispatch strategy: *per-sequence* capacity gather (GShard-style capacity,
+applied within each batch row).  For every (sequence, expert) pair we select
+the expert's top-C assigned tokens (C = 1.25 * k * T / E; overflow drops,
+standard at scale), gather them into a dense (B, E, C, D) batch, run all
+expert FFNs as one batched einsum, and scatter-add the weighted outputs
+back.
+
+Why per-sequence: selection/sort stays local to the data shard (no global
+top-k over all tokens -> no all-gather of router scores), and the expert
+einsum is local when experts shard on the model axis (EP).  The only
+cross-device traffic is the combine-side partial-sum reduction that XLA
+inserts over the model axis.  [Perf note: replacing that all-reduce combine
+with all-to-all dispatch/return is hillclimb material — see EXPERIMENTS.md
+§Perf.]
+
+Aux losses: Switch load-balancing + router z-loss, returned to the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ACT_DTYPE, dense_init, safe_einsum
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype=ACT_DTYPE):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d_model, n_experts), 0, jnp.float32),
+        "e_gate": dense_init(ks[1], (n_experts, d_model, d_ff), 1, dtype),
+        "e_up": dense_init(ks[2], (n_experts, d_model, d_ff), 1, dtype),
+        "e_down": dense_init(ks[3], (n_experts, d_ff, d_model), 1, dtype),
+    }
+
+
+def capacity_for(seq_len: int, n_experts: int, k: int,
+                 factor: float = CAPACITY_FACTOR) -> int:
+    c = int(factor * k * seq_len / n_experts)
+    c = max(1, min(c, seq_len))
+    if seq_len >= 8:
+        c = min(max(8, (c + 7) // 8 * 8), seq_len)
+    return c
+
+
+def moe_block(p, x, k: int, combine_dtype: str = "f32",
+              dispatch_a2a: bool = False):
+    """x: (B, T, D) -> (out (B, T, D), aux dict with router stats).
+
+    combine_dtype="bf16" halves the EP combine (psum over the model axis)
+    wire bytes at the cost of bf16 rounding in the expert-sum (§Perf).
+    """
+    b, t, d = x.shape
+    e = p["router"].shape[1]
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_p, topk_i = jax.lax.top_k(probs, k)               # (B, T, k)
+    topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    # assignment weight of token t for expert e within its own sequence
+    bidx = jnp.arange(b)[:, None, None]
+    tidx = jnp.arange(t)[None, :, None]
+    assign = jnp.zeros((b, t, e), jnp.float32)
+    assign = assign.at[bidx, tidx, topk_i].set(topk_p)     # (B, T, E)
+
+    c = capacity_for(t, e, k)
+    # per (sequence, expert) top-C tokens — local to the data shard
+    gate_ec, idx_ec = jax.lax.top_k(assign.transpose(0, 2, 1), c)  # (B, E, C)
+    x_ec = jnp.take_along_axis(
+        x[:, None, :, :], idx_ec[..., None], axis=2)       # (B, E, C, D)
+    if dispatch_a2a:
+        # EP dispatch: reshard batch->contract dim (an all-to-all) so the
+        # expert matmuls against contract-dim-sharded weights are local
+        # partial sums — avoids XLA's gather-via-masked-allreduce (§Perf).
+        from jax.sharding import PartitionSpec as _P
+        x_ec = jax.lax.with_sharding_constraint(
+            x_ec, _P(None, "model", None, "data"))
+
+    g = safe_einsum("becd,edf->becf", x_ec, p["e_gate"])
+    u = safe_einsum("becd,edf->becf", x_ec, p["e_up"])
+    h = (jax.nn.silu(g) * u).astype(ACT_DTYPE)
+    y_ec = safe_einsum("becf,efd->becd", h, p["e_down"])  # (B, E, C, D) f32
+
+    y_ec = y_ec * gate_ec[..., None]
+    acc_dt = jnp.bfloat16 if combine_dtype == "bf16" else jnp.float32
+    out = jnp.zeros((b, t, d), acc_dt)
+    out = out.at[bidx, idx_ec].add(y_ec.astype(acc_dt))    # combine (psum on EP)
+
+    me = probs.mean(axis=(0, 1))                           # (E,)
+    ce = (assign > 0).astype(jnp.float32).mean(axis=(0, 1))
+    aux = {
+        "lb_loss": e * jnp.sum(me * ce),
+        "z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return out.reshape(b, t, d).astype(x.dtype), aux

@@ -1,0 +1,145 @@
+"""Build any assigned architecture behind one functional interface.
+
+``build_model(cfg)`` returns a :class:`Model` with pure functions that close
+over the config — ready for ``jax.jit`` / pjit with shardings from
+``repro.runtime.sharding``.  ``input_specs(cfg, shape)`` produces the
+ShapeDtypeStruct stand-ins for every input of the chosen cell (the dry-run
+contract: weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+from . import encdec, lm
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable            # rng -> params
+    loss_fn: Callable         # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable      # (params, batch, max_len) -> (logits, cache)
+    decode_fn: Callable       # (params, cache, tokens) -> (logits, cache)
+    init_cache: Callable      # (batch, max_len) -> cache (zeros, static)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encdec:
+        return Model(
+            cfg=cfg,
+            init=partial(encdec.init_params, cfg=cfg),
+            loss_fn=lambda params, batch: encdec.loss_fn(params, cfg, batch),
+            prefill_fn=lambda params, batch, max_len: encdec.prefill(
+                params, cfg, batch["frames"], batch["tokens"], max_len),
+            decode_fn=lambda params, cache, tokens: encdec.decode_step(
+                params, cfg, cache, tokens),
+            init_cache=lambda batch, max_len, enc_len=4096: encdec.init_cache(
+                cfg, batch, max_len, enc_len),
+        )
+    return Model(
+        cfg=cfg,
+        init=partial(lm.init_params, cfg=cfg),
+        loss_fn=lambda params, batch, decompressor=None: lm.loss_fn(
+            params, cfg, batch, decompressor),
+        prefill_fn=lambda params, batch, max_len, decompressor=None:
+            lm.prefill_fn(params, cfg, batch, max_len, decompressor),
+        decode_fn=lambda params, cache, tokens, decompressor=None:
+            lm.decode_fn(params, cfg, cache, tokens, decompressor),
+        init_cache=lambda batch, max_len: lm.init_cache(cfg, batch, max_len),
+    )
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+ENC_FRAMES_STUB = 4096  # encoder frames for whisper serving cells
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    train  : token/target batches (+ modality prefix stubs)
+    prefill: prompt tokens (+ stubs)
+    decode : one new token per sequence + the KV/state cache
+    """
+    b, t = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            specs["frames"] = _sds((b, t, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = _sds((b, t), jnp.int32)
+            specs["targets"] = _sds((b, t), jnp.int32)
+        else:
+            t_text = t - cfg.prefix_embed
+            specs["tokens"] = _sds((b, t_text), jnp.int32)
+            specs["targets"] = _sds((b, t_text), jnp.int32)
+            if cfg.prefix_embed:
+                specs["prefix_embeds"] = _sds((b, cfg.prefix_embed,
+                                               cfg.d_model), jnp.bfloat16)
+    elif shape.kind == "prefill":
+        if cfg.is_encdec:
+            specs["frames"] = _sds((b, t, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = _sds((b, t), jnp.int32)
+        else:
+            t_text = t - cfg.prefix_embed
+            specs["tokens"] = _sds((b, t_text), jnp.int32)
+            if cfg.prefix_embed:
+                specs["prefix_embeds"] = _sds((b, cfg.prefix_embed,
+                                               cfg.d_model), jnp.bfloat16)
+    elif shape.kind == "decode":
+        specs["tokens"] = _sds((b,), jnp.int32)
+        specs["cache"] = cache_specs(cfg, b, t)
+    else:
+        raise ValueError(shape.kind)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    """Abstract cache pytree (ShapeDtypeStructs) for decode lowering."""
+    model = build_model(cfg)
+    if cfg.is_encdec:
+        shapes = jax.eval_shape(
+            lambda: model.init_cache(batch, max_len, ENC_FRAMES_STUB))
+    else:
+        shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    return shapes
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    import math
+    tree = abstract_params(cfg)
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active-per-token params (MoE: top-k experts only) for 6*N_active*D."""
+    import math
+    total = param_count(cfg)
+    if cfg.n_experts:
+        # subtract inactive expert params
+        tree = abstract_params(cfg)
+        expert = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+            if any(str(k).startswith("e_") for k in keys):
+                expert += math.prod(leaf.shape)
+        active_frac = cfg.experts_per_token / cfg.n_experts
+        total = total - expert + int(expert * active_frac)
+    return total

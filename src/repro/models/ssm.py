@@ -1,0 +1,146 @@
+"""Selective state-space (Mamba/S6) block — used by the Jamba hybrid.
+
+Training/prefill run the recurrence with ``lax.scan`` over time carrying the
+(B, d_inner, d_state) state; the per-step tensors stay small (the
+(T, d_inner, d_state) outer product is never materialized — that is the
+memory trick Mamba's kernels implement, expressed here at the XLA level).
+Decode is the same body applied once.
+
+Roofline note: the scan body is counted ONCE by HLO cost_analysis.  The
+pointwise state update is <1% of a Jamba layer's FLOPs (projections
+dominate), and launch/roofline.py adds the exact analytic correction
+``T * (6 * B * d_inner * d_state)`` per SSM layer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ACT_DTYPE, dense_init
+
+
+def mamba_dims(d_model: int, d_state: int, expand: int = 2):
+    d_inner = expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    return d_inner, dt_rank
+
+
+def init_mamba(key, d_model: int, d_state: int, conv_dim: int,
+               dtype=ACT_DTYPE):
+    d_inner, dt_rank = mamba_dims(d_model, d_state)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), 0, dtype),
+        "conv_w": dense_init(ks[1], (conv_dim, d_inner), 0, dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * d_state), 0, dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), 0, dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, dtype),  # softplus^-1(0.01)
+        "a_log": jnp.log(a).astype(jnp.float32),       # (d_inner, d_state)
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_inner, d_model), 0, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over time. x (B, T, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # K=4: static unroll, exact HLO cost
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_coeffs(p, xz, d_state: int):
+    """Shared projection math for scan/step. xz: (B, T, 2*d_inner)."""
+    d_inner = p["dt_proj"].shape[1]
+    dt_rank = p["dt_proj"].shape[0]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = _causal_conv(x, p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x.astype(jnp.float32)).astype(ACT_DTYPE)
+    proj = jnp.einsum("btc,cr->btr", x, p["x_proj"],
+                      preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rc->btc", proj[..., :dt_rank], p["dt_proj"],
+                   preferred_element_type=jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    b_t = proj[..., dt_rank : dt_rank + d_state]           # (B, T, S)
+    c_t = proj[..., dt_rank + d_state :]                   # (B, T, S)
+    return x, z, dt, b_t, c_t
+
+
+def mamba_forward(p, u, d_state: int, conv_dim: int = 4):
+    """u: (B, T, D) -> ((B, T, D), final_state_cache). Scan over time (the
+    (T, d_inner, d_state) outer product never materializes)."""
+    xz = jnp.einsum("btd,de->bte", u, p["in_proj"],
+                    preferred_element_type=jnp.float32).astype(ACT_DTYPE)
+    x_raw = jnp.split(xz, 2, axis=-1)[0]                   # pre-conv (for cache)
+    x, z, dt, b_t, c_t = _ssm_coeffs(p, xz, d_state)
+    a = -jnp.exp(p["a_log"])                               # (C, S)
+
+    def step(h, inp):
+        x_t, dt_t, bt_t, ct_t = inp                        # (B,C),(B,C),(B,S),(B,S)
+        da = jnp.exp(dt_t[..., None] * a)                  # (B, C, S)
+        h = da * h + (dt_t * x_t)[..., None] * bt_t[:, None, :]
+        y = jnp.einsum("bcs,bs->bc", h, ct_t)
+        return h, y
+
+    b, t, c = x.shape
+    h0 = jnp.zeros((b, c, d_state), jnp.float32)
+    xs = (x.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2),
+          b_t.transpose(1, 0, 2), c_t.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + x.astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("btc,cd->btd", y.astype(ACT_DTYPE), p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(u.dtype)
+    state = {"h": h_final, "conv": x_raw[:, t - (conv_dim - 1):, :]}
+    return out, state
+
+
+def init_mamba_cache(d_model: int, d_state: int, conv_dim: int, batch: int):
+    d_inner, _ = mamba_dims(d_model, d_state)
+    return {
+        "h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_dim - 1, d_inner), ACT_DTYPE),
+    }
+
+
+def mamba_step(p, u, cache, d_state: int):
+    """Single-token decode. u: (B, 1, D). O(1) state — this is what makes
+    the hybrid run long_500k."""
+    xz = jnp.einsum("btd,de->bte", u, p["in_proj"],
+                    preferred_element_type=jnp.float32).astype(ACT_DTYPE)
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    conv_win = jnp.concatenate([cache["conv"], x_raw], axis=1)  # (B, K, C)
+    new_conv = conv_win[:, 1:]
+    w = p["conv_w"].astype(jnp.float32)
+    x = (conv_win.astype(jnp.float32) * w[None]).sum(axis=1, keepdims=True) \
+        + p["conv_b"].astype(jnp.float32)
+    x = jax.nn.silu(x).astype(ACT_DTYPE)                   # (B, 1, C)
+    dt_rank = p["dt_proj"].shape[0]
+    proj = jnp.einsum("btc,cr->btr", x, p["x_proj"],
+                      preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rc->btc", proj[..., :dt_rank], p["dt_proj"],
+                   preferred_element_type=jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))[:, 0]          # (B, C)
+    b_t = proj[:, 0, dt_rank : dt_rank + d_state]
+    c_t = proj[:, 0, dt_rank + d_state :]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a)
+    h = da * cache["h"] + (dt * x[:, 0].astype(jnp.float32))[..., None] \
+        * b_t[:, None, :]
+    y = jnp.einsum("bcs,bs->bc", h, c_t)[:, None, :]       # (B, 1, C)
+    y = y + x.astype(jnp.float32) * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("btc,cd->btd", y.astype(ACT_DTYPE), p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(u.dtype)
+    return out, {"h": h, "conv": new_conv}

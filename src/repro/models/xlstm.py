@@ -1,0 +1,193 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent gate feedback).
+
+Both are attention-free with O(1) decode state — xlstm-125m is one of the
+two assigned architectures that runs the long_500k cell.
+
+Implementation: numerically-stabilized recurrent forms via ``lax.scan``
+(exponential input gates with the m_t running-max stabilizer, App. A of the
+paper).  Roofline note: scan bodies are counted once by cost_analysis;
+launch/roofline.py adds the analytic per-step state-update FLOPs
+(~B*H*hd^2*6 per mLSTM layer-step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ACT_DTYPE, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix memory C (B, H, hd_v, hd_k)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype=ACT_DTYPE):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (d_model, d_model), 0, dtype),
+        "wk": dense_init(ks[1], (d_model, d_model), 0, dtype),
+        "wv": dense_init(ks[2], (d_model, d_model), 0, dtype),
+        "wi": dense_init(ks[3], (d_model, n_heads), 0, jnp.float32),
+        "wf": dense_init(ks[4], (d_model, n_heads), 0, jnp.float32),
+        "wo_gate": dense_init(ks[5], (d_model, d_model), 0, dtype),
+        "out_proj": dense_init(ks[6], (d_model, d_model), 0, dtype),
+        "norm": jnp.zeros((d_model,), dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, n_heads: int):
+    b, t, d = x.shape
+    hd = d // n_heads
+    q = jnp.einsum("btd,de->bte", x, p["wq"],
+                   preferred_element_type=jnp.float32).reshape(b, t, n_heads, hd)
+    k = jnp.einsum("btd,de->bte", x, p["wk"],
+                   preferred_element_type=jnp.float32).reshape(b, t, n_heads, hd)
+    v = jnp.einsum("btd,de->bte", x, p["wv"],
+                   preferred_element_type=jnp.float32).reshape(b, t, n_heads, hd)
+    k = k / jnp.sqrt(jnp.float32(hd))
+    i_pre = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["wi"])
+    f_pre = jnp.einsum("btd,dh->bth", x.astype(jnp.float32), p["wf"])
+    o_gate = jax.nn.sigmoid(
+        jnp.einsum("btd,de->bte", x, p["wo_gate"],
+                   preferred_element_type=jnp.float32))
+    return q, k, v, i_pre, f_pre, o_gate
+
+
+def _mlstm_cell(carry, inp):
+    """Stabilized mLSTM cell (paper eqs. 19-27)."""
+    c, n, m = carry                       # (B,H,hdv,hdk), (B,H,hdk), (B,H)
+    q_t, k_t, v_t, i_pre, f_pre = inp     # (B,H,hd) x3, (B,H) x2
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c = f_g[..., None, None] * c + i_g[..., None, None] \
+        * (v_t[..., :, None] * k_t[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k_t
+    h_num = jnp.einsum("bhvk,bhk->bhv", c, q_t)
+    h_den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), jnp.exp(-m_new))
+    h = h_num / h_den[..., None]
+    return (c, n, m_new), h
+
+
+def mlstm_forward(p, x, n_heads: int):
+    """x: (B, T, D) -> (B, T, D), scan over time."""
+    b, t, d = x.shape
+    hd = d // n_heads
+    q, k, v, i_pre, f_pre, o_gate = _mlstm_qkvif(p, x, n_heads)
+    carry = (jnp.zeros((b, n_heads, hd, hd), jnp.float32),
+             jnp.zeros((b, n_heads, hd), jnp.float32),
+             jnp.full((b, n_heads), -1e30, jnp.float32))
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    carry, hs = jax.lax.scan(_mlstm_cell, carry, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, t, d)          # (B, T, D)
+    h = rms_norm(h.astype(ACT_DTYPE), p["norm"])
+    h = h * o_gate.astype(ACT_DTYPE)
+    out = jnp.einsum("btd,de->bte", h, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2]}
+
+
+def init_mlstm_cache(d_model: int, n_heads: int, batch: int):
+    hd = d_model // n_heads
+    return {
+        "c": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_step(p, x, cache, n_heads: int):
+    """Single-token decode, O(1) state."""
+    q, k, v, i_pre, f_pre, o_gate = _mlstm_qkvif(p, x, n_heads)
+    carry = (cache["c"], cache["n"], cache["m"])
+    carry, h = _mlstm_cell(carry, (q[:, 0], k[:, 0], v[:, 0],
+                                   i_pre[:, 0], f_pre[:, 0]))
+    b, d = x.shape[0], x.shape[2]
+    h = h.reshape(b, 1, d)
+    h = rms_norm(h.astype(ACT_DTYPE), p["norm"]) * o_gate.astype(ACT_DTYPE)
+    out = jnp.einsum("btd,de->bte", h, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"c": carry[0], "n": carry[1], "m": carry[2]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory, recurrent gate feedback (inherently sequential)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int, dtype=ACT_DTYPE):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model), 0, dtype),
+        "r_in": dense_init(ks[1], (d_model, 4 * d_model), 0, dtype),
+        "out_proj": dense_init(ks[2], (d_model, d_model), 0, dtype),
+        "norm": jnp.zeros((d_model,), dtype),
+    }
+
+
+def _slstm_cell(p, carry, x_pre_t):
+    """carry: (c, n, h, m) each (B, D) f32; x_pre_t: (B, 4D) — the input
+    projection is hoisted OUT of the time scan (it has no recurrent
+    dependency), leaving only the recurrent r_in matmul in the loop."""
+    c, n, h, m = carry
+    pre = (x_pre_t
+           + jnp.einsum("bd,de->be", h.astype(ACT_DTYPE), p["r_in"],
+                        preferred_element_type=jnp.float32))
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_pre)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new)
+
+
+def slstm_forward(p, x):
+    """x: (B, T, D) -> (B, T, D), sequential scan (the paper's sLSTM has
+    true recurrent feedback — not parallelizable; this is expected).  The
+    input projection runs as ONE (B*T, D)x(D, 4D) matmul outside the scan."""
+    b, t, d = x.shape
+    x_pre = jnp.einsum("btd,de->bte", x, p["w_in"],
+                       preferred_element_type=jnp.float32)
+
+    def step(carry, x_pre_t):
+        carry = _slstm_cell(p, carry, x_pre_t)
+        return carry, carry[2]
+
+    carry = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) \
+        + (jnp.full((b, d), -1e30, jnp.float32),)
+    carry, hs = jax.lax.scan(step, carry, x_pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(ACT_DTYPE)
+    h = rms_norm(h, p["norm"])
+    out = jnp.einsum("btd,de->bte", h, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+
+def init_slstm_cache(d_model: int, batch: int):
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.zeros((batch, d_model), jnp.float32),
+        "h": jnp.zeros((batch, d_model), jnp.float32),
+        "m": jnp.full((batch, d_model), -1e30, jnp.float32),
+    }
+
+
+def slstm_step(p, x, cache):
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    x_pre = jnp.einsum("bd,de->be", x[:, 0], p["w_in"],
+                       preferred_element_type=jnp.float32)
+    carry = _slstm_cell(p, carry, x_pre)
+    h = carry[2][:, None, :].astype(ACT_DTYPE)
+    h = rms_norm(h, p["norm"])
+    out = jnp.einsum("btd,de->bte", h, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}

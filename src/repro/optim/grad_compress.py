@@ -1,0 +1,65 @@
+"""Lossless ENEC gradient sync across the slow (cross-pod DCI) axis.
+
+At multi-pod scale the cross-pod all-reduce of gradients rides links an
+order of magnitude slower than in-pod ICI.  Because ENEC is lossless, the
+sync below is *bit-identical* to a plain all-reduce up to f32 summation
+order — no accuracy/convergence caveats, unlike lossy 1-bit/top-k schemes.
+
+Pattern (inside shard_map over the "pod" axis):
+    local grads (already reduced within pod by the in-pod program)
+      -> ENEC-encode (block streams, fixed-shape pytree)
+      -> all_gather over "pod" (compressed bytes on the wire: ~1/ratio)
+      -> decode both pods' streams locally, sum.
+
+Gradient exponents are highly skewed (same §III statistics as weights), so
+ratios land in the 1.3-1.5x range for bf16 grads — that much less DCI
+traffic on every step.
+
+``compressed_allreduce`` is the shard_map-ready primitive; tests run it on
+a toy 2-pod host mesh and assert bit-identity with jax.lax.psum.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.dtypes import format_for
+from repro.core.params import EnecParams
+
+
+def compressed_allreduce(x, axis_name: str, p: EnecParams,
+                         block_elems: int = 16384):
+    """All-reduce ``x`` over ``axis_name`` with ENEC-compressed transport.
+
+    Must run inside shard_map/vmap with ``axis_name`` bound.  ``p`` is the
+    pre-searched codec parameterization (search offline on a gradient
+    sample; §VI-E transferability applies).
+    """
+    fmt = format_for(x.dtype)
+    bits = codec.to_blocks(x, fmt, block_elems)
+    streams = codec.encode_blocks(bits, fmt, p)
+    gathered = jax.tree.map(
+        lambda a: jax.lax.all_gather(a, axis_name), streams)
+    n = gathered.mask.shape[0]
+
+    total = jnp.zeros(x.shape, jnp.float32)
+    for i in range(n):  # static pod count (2): unrolled decode+sum
+        s_i = jax.tree.map(lambda a: a[i], gathered)
+        bits_i = codec.decode_blocks(s_i, block_elems, fmt, p)
+        x_i = codec.from_blocks(bits_i, x.shape, fmt)
+        total = total + x_i.astype(jnp.float32)
+    return total.astype(x.dtype)
+
+
+def wire_bytes_saved(x, p: EnecParams) -> dict:
+    """Estimate of per-step cross-pod traffic with/without compression."""
+    fmt = format_for(x.dtype)
+    raw = x.size * x.dtype.itemsize
+    comp = raw / max(fmt.total_bits /
+                     (p.expected_bits + fmt.raw_bits), 1e-9) \
+        if p.expected_bits else raw
+    return {"raw_bytes": raw, "compressed_bytes": int(comp),
+            "ratio": raw / max(comp, 1)}

@@ -1,0 +1,53 @@
+"""Elastic scaling: rebuild meshes from surviving topology and reshard
+state.
+
+Flow on a real fleet: a node failure kills the job -> the scheduler
+restarts it on the surviving slice -> ``best_mesh_for`` picks the largest
+(data, model) grid the new device count supports (model width capped by
+head/ffn divisibility) -> CheckpointManager.load() reshards LATEST onto it
+(device_put with the new NamedShardings) -> training resumes at the saved
+step.  Nothing in the pipeline depends on world size: data is a pure
+function of (seed, step), and ENEC-compressed checkpoints are
+layout-agnostic wire bytes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from repro.launch.mesh import make_mesh
+
+
+def candidate_grids(n_devices: int, max_model: int = 16):
+    """(data, model) factorizations, largest model axis first."""
+    out = []
+    m = max_model
+    while m >= 1:
+        if n_devices % m == 0:
+            out.append((n_devices // m, m))
+        m //= 2
+    return out
+
+
+def best_mesh_for(cfg, n_devices: Optional[int] = None, max_model: int = 16):
+    """Largest usable (data, model) mesh for this arch on the surviving
+    devices. Model axis must divide the TP-sharded dims actually used."""
+    n = n_devices if n_devices is not None else len(jax.devices())
+    hd_total = cfg.n_heads * cfg.head_dim_()
+    for data, model in candidate_grids(n, max_model):
+        divisible = (hd_total % model == 0
+                     and (cfg.d_ff % model == 0 or cfg.d_ff == 0)
+                     and (cfg.n_experts % model == 0 or cfg.n_experts == 0))
+        if divisible:
+            return make_mesh((data, model), ("data", "model"))
+    return make_mesh((n,), ("data",))
+
+
+def reshard(tree, mesh, pspecs):
+    """Move existing (host or device) state onto a new mesh."""
+    from jax.sharding import NamedSharding
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                             is_leaf=lambda x: hasattr(x, "spec") or
+                             type(x).__name__ == "PartitionSpec")
+    return jax.device_put(tree, shardings)

@@ -1,0 +1,197 @@
+"""Sharding rules: DP / TP / EP / SP / pod-DP as PartitionSpecs.
+
+Logical layout (single pod 16x16, multi-pod 2x16x16):
+  * batch            -> ("pod", "data") when divisible (pure DP across pods)
+  * vocab / heads / ffn / experts / d_inner -> "model"  (TP / EP)
+  * decode KV-cache sequence -> "model" (+ "pod" for long-context cells)
+    — flash-decoding style: XLA turns the sharded-S softmax into local
+    softmax + tiny stat all-reduces, so a 550 GB cache cell fits.
+  * params replicated across "pod" (weights pure-DP across pods; gradient
+    sync over "pod" is where optim/grad_compress.py applies ENEC).
+
+Rules are name/shape driven over pytree paths, so every architecture in the
+zoo (heterogeneous Jamba periods included) gets specs without per-model
+tables.  Axes are dropped automatically when a dim isn't divisible by the
+mesh axis (e.g. xLSTM's 4 heads on a 16-way model axis -> replicate).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fits(dim: int, mesh: Mesh, name) -> bool:
+    size = _axis_size(mesh, name)
+    return size > 1 and dim % size == 0
+
+
+def _present(mesh: Mesh, name):
+    """Drop axis names that don't exist in this mesh; collapse tuples."""
+    if name is None:
+        return None
+    if isinstance(name, (tuple, list)):
+        kept = tuple(n for n in name if n in mesh.shape)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return name if name in mesh.shape else None
+
+
+def _maybe(dim: int, mesh: Mesh, name):
+    """axis name if present and divisible, else None (replicate)."""
+    name = _present(mesh, name)
+    return name if name is not None and _fits(dim, mesh, name) else None
+
+
+def batch_axis(mesh: Mesh, b: int):
+    """Largest of ("pod","data") / "data" / None that divides the batch."""
+    full = _present(mesh, ("pod", "data"))
+    if full is not None and _fits(b, mesh, full):
+        return full
+    if _fits(b, mesh, "data"):
+        return "data"
+    return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k)))))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_pspec(path: str, shape, mesh: Mesh, mode: str = "train") -> P:
+    """TP(+EP) rules by leaf name; leading stack dims stay unsharded.
+
+    mode="train": additionally FSDP-shard the non-TP matrix dim over "data"
+    (ZeRO-3 style — params+optimizer of a 235B MoE at 10 B/param must spread
+    over all 256 chips, not just the 16-way model axis; XLA inserts the
+    FSDP all-gathers / reduce-scatters).
+    mode="serve": weights TP-only (no per-step weight all-gathers on the
+    latency path) except MoE expert stacks, which get expert-TP over "data"
+    (E on model x F on data) — a 470 GB expert pool doesn't fit 16-way.
+    """
+    rank = len(shape)
+    lead = (None,) * (rank - 2)
+    name = path.rsplit("/", 1)[-1]
+    fsdp = "data" if mode == "train" else None
+
+    def last2(a, b):
+        return P(*lead, a, b)
+
+    def m(dim, ax):
+        return _maybe(dim, mesh, ax)
+
+    # ENEC stream arrays (weight streaming): (L, S, blocks, width) with the
+    # TP-shard dim S on "model" — decompression stays shard-local.
+    if "/streams/" in path or "/ct/" in path:
+        if rank >= 2:
+            return P(None, m(shape[1], "model"), *((None,) * (rank - 2)))
+        return P(*((None,) * rank))
+    if name == "embed":
+        return P(m(shape[0], "model"), m(shape[1], fsdp))
+    if name == "head":
+        return P(m(shape[0], fsdp), m(shape[1], "model"))
+    if rank == 1 or "norm" in name or name in ("conv_b", "dt_bias", "d_skip",
+                                               "a_log"):
+        return P(*((None,) * rank))
+    # expert stacks (..., E, D, F) / (..., E, F, D): EP on model; the big
+    # matrix dim spreads over data in BOTH modes (expert-TP / FSDP).
+    # mode="serve_ep": shard the CONTRACTING dim on data — expert matmuls
+    # become local partial sums + a small output psum instead of XLA
+    # all-gathering the dispatched tokens (§Perf hillclimb 2).
+    if name in ("e_gate", "e_up", "e_down"):
+        if mode == "serve_ep":
+            return P(*(None,) * (rank - 3), m(shape[-3], "model"),
+                     m(shape[-2], "data"), None)
+        if name == "e_down":
+            return P(*(None,) * (rank - 3), m(shape[-3], "model"),
+                     m(shape[-2], "data"), None)
+        return P(*(None,) * (rank - 3), m(shape[-3], "model"), None,
+                 m(shape[-1], "data"))
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "x_proj",
+                "dt_proj", "w_in", "r_in", "wi", "wf", "wo_gate", "router"):
+        return last2(m(shape[-2], fsdp), m(shape[-1], "model"))
+    if name in ("wo", "w_down", "out_proj"):
+        return last2(m(shape[-2], "model"), m(shape[-1], fsdp))
+    if name == "conv_w":
+        return last2(None, m(shape[-1], "model"))
+    return P(*((None,) * rank))
+
+
+def param_pspecs(params, mesh: Mesh, mode: str = "train"):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [param_pspec(_path_str(path), leaf.shape, mesh, mode)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batches, caches, outputs
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(specs: dict, mesh: Mesh, global_batch: int) -> dict:
+    ba = batch_axis(mesh, global_batch)
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            out[k] = cache_pspecs(v, mesh, global_batch)
+        else:
+            out[k] = P(ba, *((None,) * (len(v.shape) - 1)))
+    return out
+
+
+def cache_pspecs(cache, mesh: Mesh, b: int):
+    """KV caches: batch on data(+pod) when divisible; else sequence dim on
+    ("pod","model") — the long-context (SP) path.  SSM states: batch, else
+    channel on model."""
+    ba = batch_axis(mesh, b)
+
+    def spec_for(path, leaf) -> P:
+        name = _path_str(path).rsplit("/", 1)[-1]
+        shape = leaf.shape
+        if name == "lengths":
+            return P(ba)
+        if name in ("k", "v", "mem_k", "mem_v"):
+            # (periods, B, S, KV, hd)
+            seq_axes = _maybe(shape[2], mesh, "model") if ba is not None \
+                else _maybe(shape[2], mesh, ("pod", "model"))
+            return P(None, ba, seq_axes, None, None)
+        if name in ("h", "conv"):        # mamba (periods, B, ..., C) / (periods, B, K-1, C)
+            ch = _maybe(shape[-1], mesh, "model")
+            return P(None, ba, *((None,) * (len(shape) - 3)), ch)
+        if name in ("c", "n", "m"):      # mlstm/slstm states
+            return P(None, ba, *((None,) * (len(shape) - 2)))
+        return P(*((None,) * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def logits_pspec(mesh: Mesh, b: int, vocab: int) -> P:
+    return P(batch_axis(mesh, b), _maybe(vocab, mesh, "model"))
+
+
+def to_named(tree_of_pspecs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+        is_leaf=lambda x: isinstance(x, P))

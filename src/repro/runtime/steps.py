@@ -1,0 +1,40 @@
+"""Step builders: the jit-able train / prefill / decode functions shared by
+the launcher, the dry-run and the examples."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+def build_train_step(model, opt_cfg: adamw.AdamWConfig,
+                     decompressor: Optional[Callable] = None) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    def loss_of(params, batch):
+        if decompressor is None:
+            return model.loss_fn(params, batch)
+        return model.loss_fn(params, batch, decompressor=decompressor)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params, batch)
+        params, opt_state, om = adamw.apply(opt_cfg, params, opt_state, grads)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def build_prefill_step(model, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill_fn(params, batch, max_len)
+    return prefill_step
+
+
+def build_decode_step(model) -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode_fn(params, cache, tokens)
+    return decode_step

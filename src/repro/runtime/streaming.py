@@ -1,0 +1,181 @@
+"""Weight-streaming serving: ENEC-compressed weights resident in HBM,
+decompressed layer-by-layer inside the serve step (paper §VI-C).
+
+The paper overlaps layer l+1's decompression with layer l's forward on the
+NPU; here the layer stack is a ``lax.scan`` whose body decompresses its
+slice of the compressed streams first — XLA's latency-hiding scheduler
+overlaps the stream DMA + decode of iteration l+1 with iteration l's
+matmuls, which is the same pipeline one level down the hierarchy.
+
+TP locality: a weight whose axis ``k`` is model-sharded is compressed in a
+*moveaxis(k -> 0)* layout with the block dimension sharded on "model".
+Decompression is then shard-local (blocks stay on their device), the
+un-permute is a metadata transpose, and no resharding collectives appear on
+the latency path.
+
+Only leaves >= ``min_bytes`` are compressed (norms/biases stay raw —
+negligible bytes, and the decode cost would not amortize).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import (CompressedTensor, abstract_compressed,
+                            compress_array, decompress_array)
+from repro.core.params import EnecParams
+from repro.runtime import sharding as sh
+
+MIN_STREAM_BYTES = 1 << 20  # 1 MiB
+STREAM_SHARDS = 16          # production TP width (divisors also work)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StreamedWeight:
+    """A stacked weight (L, ...) stored as per-layer ENEC streams."""
+    ct: CompressedTensor                       # arrays have leading (L,) dim
+    tp_axis: int = dataclasses.field(metadata=dict(static=True))
+    layer_shape: tuple = dataclasses.field(metadata=dict(static=True))
+    dtype_str: str = dataclasses.field(metadata=dict(static=True))
+
+
+def _is_ct(x):
+    return isinstance(x, (StreamedWeight, CompressedTensor))
+
+
+def _tp_axis_for(path: str, shape) -> int:
+    """Which axis is model-sharded at serve time (mirror of sharding.py)."""
+    name = path.rsplit("/", 1)[-1]
+    if name == "embed":
+        return 0
+    if name in ("wo", "w_down", "out_proj"):
+        return len(shape) - 2
+    if name in ("e_gate", "e_up", "e_down"):
+        return len(shape) - 3
+    return len(shape) - 1
+
+
+def compress_params_for_streaming(params, *, shared_params: Optional[EnecParams] = None,
+                                  min_bytes: int = MIN_STREAM_BYTES,
+                                  shards: int = STREAM_SHARDS):
+    """params tree -> same-structure tree with big stacked leaves replaced by
+    StreamedWeight.  Leaves under ``period``/stacks keep their leading layer
+    dim in the stream arrays so ``lax.scan`` slices them layer by layer."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "name",
+                        getattr(k, "idx", k)))) for k in path)
+        stacked = "period" in pstr or "stack" in pstr
+        nbytes = leaf.size * leaf.dtype.itemsize
+        if (not stacked or nbytes < min_bytes or leaf.ndim < 3
+                or leaf.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32)):
+            out.append(leaf)
+            continue
+        layer_shape = leaf.shape[1:]
+        tp_axis = _tp_axis_for(pstr, layer_shape)
+        n_layers = leaf.shape[0]
+        perm = jnp.moveaxis(leaf, 1 + tp_axis, 1)       # (L, tp_dim, ...)
+        # one param search over the whole stack (a layer stack is one
+        # logical tensor) so every layer shares static codec metadata
+        p = shared_params
+        if p is None:
+            from repro.core.dtypes import format_for
+            from repro.core import params as params_mod
+            p = params_mod.search_for_array(
+                np.asarray(jax.device_get(perm)), format_for(leaf.dtype))
+        cts = [compress_array(perm[i], p, shards=shards)
+               for i in range(n_layers)]
+        if any(c.mode != "enec" for c in cts):
+            out.append(leaf)                            # incompressible
+            continue
+        stacked_ct = jax.tree.map(lambda *xs: jnp.stack(xs), *cts)
+        # keep single-layer metadata (scan slices the leading L dim away)
+        meta = cts[0]
+        ct = CompressedTensor(
+            streams=stacked_ct.streams, raw_bytes=None,
+            fmt_name=meta.fmt_name, params=meta.params, shape=meta.shape,
+            dtype_str=meta.dtype_str, block_elems=meta.block_elems,
+            shards=meta.shards, mode="enec")
+        out.append(StreamedWeight(ct=ct, tp_axis=tp_axis,
+                                  layer_shape=tuple(layer_shape),
+                                  dtype_str=str(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decompress_sliced(p_sliced):
+    """The ``decompressor`` hook for lm.py: StreamedWeight (layer slice,
+    leading L dim already removed by scan/indexing) -> dense weight."""
+    def one(leaf):
+        if not isinstance(leaf, StreamedWeight):
+            return leaf
+        w_perm = decompress_array(leaf.ct)              # moveaxis'd layout
+        w = jnp.moveaxis(w_perm, 0, leaf.tp_axis)
+        return w.astype(jnp.dtype(leaf.dtype_str))
+    return jax.tree.map(one, p_sliced,
+                        is_leaf=lambda x: isinstance(x, StreamedWeight))
+
+
+def abstract_streamed_params(cfg, p: EnecParams, *,
+                             min_bytes: int = MIN_STREAM_BYTES,
+                             shards: int = STREAM_SHARDS):
+    """ShapeDtypeStruct version of compress_params_for_streaming — lets the
+    dry-run lower the streamed serve step without allocating anything."""
+    from repro.models.registry import abstract_params
+
+    params = abstract_params(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "name",
+                        getattr(k, "idx", k)))) for k in path)
+        stacked = "period" in pstr or "stack" in pstr
+        nbytes = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        if (not stacked or nbytes < min_bytes or len(leaf.shape) < 3
+                or jnp.dtype(leaf.dtype) not in (jnp.bfloat16, jnp.float16,
+                                                 jnp.float32)):
+            out.append(leaf)
+            continue
+        layer_shape = leaf.shape[1:]
+        tp_axis = _tp_axis_for(pstr, layer_shape)
+        n_layers = leaf.shape[0]
+        perm_shape = (layer_shape[tp_axis],) + tuple(
+            d for i, d in enumerate(layer_shape) if i != tp_axis)
+        ct1 = abstract_compressed(perm_shape, leaf.dtype, p, shards=shards)
+        streams = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_layers,) + s.shape, s.dtype),
+            ct1.streams)
+        ct = CompressedTensor(
+            streams=streams, raw_bytes=None, fmt_name=ct1.fmt_name,
+            params=ct1.params, shape=ct1.shape, dtype_str=ct1.dtype_str,
+            block_elems=ct1.block_elems, shards=ct1.shards, mode="enec")
+        out.append(StreamedWeight(ct=ct, tp_axis=tp_axis,
+                                  layer_shape=tuple(layer_shape),
+                                  dtype_str=str(jnp.dtype(leaf.dtype))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stream_stats(streamed) -> dict:
+    """Bytes accounting over a streamed tree."""
+    total_raw = total_dev = 0
+    n_streamed = 0
+    for leaf in jax.tree.leaves(
+            streamed, is_leaf=lambda x: isinstance(x, StreamedWeight)):
+        if isinstance(leaf, StreamedWeight):
+            n_streamed += 1
+            l = leaf.ct.streams.mask.shape[0]
+            per_layer_raw = int(np.prod(leaf.layer_shape)) \
+                * jnp.dtype(leaf.dtype_str).itemsize
+            total_raw += l * per_layer_raw
+            total_dev += leaf.ct.nbytes_device()
+        elif hasattr(leaf, "size"):
+            total_raw += leaf.size * leaf.dtype.itemsize
+            total_dev += leaf.size * leaf.dtype.itemsize
+    return {"streamed_tensors": n_streamed, "raw_bytes": total_raw,
+            "device_bytes": total_dev,
+            "hbm_ratio": total_raw / max(total_dev, 1)}

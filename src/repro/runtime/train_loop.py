@@ -1,0 +1,120 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler watchdog,
+async ENEC checkpointing, deterministic data resume.
+
+The loop is single-controller JAX: on a real multi-pod fleet each host runs
+this same loop (jax.distributed), data is sharded by host id, and restart
+after any node failure is: reschedule job -> load LATEST -> resume at the
+recorded step with the same data stream (pipeline is a pure function of the
+step).  Elastic restarts may change the mesh: CheckpointManager.load
+reshards via device_put.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.data import pipeline as data_pipeline
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    """EMA step-time straggler detection.
+
+    On a fleet, a step time far above the EMA means a slow/failing host
+    (every host runs the same SPMD program, so one straggler stalls all).
+    We flag, log, and after ``max_strikes`` trigger the on_straggler hook
+    (production: checkpoint + evict host + elastic restart)."""
+    factor: float = 2.5
+    ema: float = 0.9
+    max_strikes: int = 3
+    warmup_steps: int = 3
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_every: int = 200
+    log_every: int = 10
+    watchdog: WatchdogConfig = dataclasses.field(default_factory=WatchdogConfig)
+
+
+def run(model, opt_cfg: adamw.AdamWConfig, data_cfg, loop_cfg: TrainLoopConfig,
+        *, ckpt: Optional[CheckpointManager] = None, train_step=None,
+        params=None, opt_state=None, on_metrics: Optional[Callable] = None,
+        on_straggler: Optional[Callable] = None) -> dict:
+    """Run (or resume) training. Returns final state + stats."""
+    from repro.runtime.steps import build_train_step
+
+    if train_step is None:
+        train_step = jax.jit(build_train_step(model, opt_cfg),
+                             donate_argnums=(0, 1))
+    if params is None:
+        params = model.init(jax.random.key(data_cfg.seed))
+    if opt_state is None:
+        opt_state = adamw.init(params)
+
+    start_step = 0
+    if ckpt is not None and ckpt.latest_step() is not None:
+        state = {"params": params, "opt": opt_state}
+        state, manifest = ckpt.load(state)
+        params, opt_state = state["params"], state["opt"]
+        start_step = int(manifest["step"])
+        print(f"[train] resumed from step {start_step} "
+              f"(ckpt ratio {manifest['ratio']:.3f}x)")
+
+    it = data_pipeline.Prefetcher(data_cfg, start_step)
+    ema_dt, strikes = None, 0
+    history = []
+    t_loop = time.time()
+    try:
+        for step in range(start_step, loop_cfg.total_steps):
+            batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
+            t0 = time.time()
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+
+            wd = loop_cfg.watchdog
+            if step - start_step >= wd.warmup_steps:
+                if ema_dt is not None and dt > wd.factor * ema_dt:
+                    strikes += 1
+                    print(f"[watchdog] step {step} took {dt:.3f}s "
+                          f"(EMA {ema_dt:.3f}s) — strike {strikes}")
+                    if strikes >= wd.max_strikes:
+                        if on_straggler is not None:
+                            on_straggler(step)
+                        if ckpt is not None:
+                            ckpt.save(step, {"params": params,
+                                             "opt": opt_state})
+                        strikes = 0
+                else:
+                    strikes = max(0, strikes - 1)
+                ema_dt = dt if ema_dt is None else \
+                    wd.ema * ema_dt + (1 - wd.ema) * dt
+            else:
+                ema_dt = dt
+
+            if step % loop_cfg.log_every == 0:
+                row = {"step": step, "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "dt_s": round(dt, 4)}
+                history.append(row)
+                if on_metrics is not None:
+                    on_metrics(row)
+            if ckpt is not None and step and step % loop_cfg.ckpt_every == 0:
+                ckpt.save(step, {"params": params, "opt": opt_state})
+    finally:
+        it.close()
+        if ckpt is not None:
+            ckpt.wait()
+    if ckpt is not None:
+        ckpt.save(loop_cfg.total_steps, {"params": params, "opt": opt_state},
+                  blocking=True)
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "wall_s": time.time() - t_loop}

@@ -1,0 +1,25 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here.
+# Smoke tests and benches must see 1 device; only launch/dryrun.py forces
+# 512. Multi-device tests spawn subprocesses with their own XLA_FLAGS.
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_realistic_bf16(n, seed=0, outlier_frac=2e-3):
+    """Trained-LLM-like weights (paper §III statistics)."""
+    import jax.numpy as jnp
+    r = np.random.default_rng(seed)
+    w = r.standard_normal(n) * 0.015
+    w[r.random(n) < outlier_frac] *= 64.0
+    return jnp.asarray(w.astype("float32")).astype(jnp.bfloat16)

@@ -1,0 +1,71 @@
+"""Hierarchical halving bit-packing: exhaustive + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitio
+
+
+@pytest.mark.parametrize("width", list(range(0, 17)))
+@pytest.mark.parametrize("n", [8, 64, 256, 1024])
+def test_roundtrip_all_widths(width, n):
+    rng = np.random.default_rng(width * 1000 + n)
+    vals = rng.integers(0, 1 << max(width, 1), size=n, dtype=np.uint32)
+    if width == 0:
+        vals = np.zeros(n, np.uint32)
+    v = jnp.asarray(vals.astype(np.uint16 if width <= 16 else np.uint32))
+    packed = bitio.pack_fixed(v, width)
+    assert packed.shape[-1] == bitio.packed_nbytes(n, width)
+    out = bitio.unpack_fixed(packed, n, width)
+    np.testing.assert_array_equal(np.asarray(out), vals & ((1 << width) - 1)
+                                  if width else np.zeros(n))
+
+
+def test_packed_nbytes_matches_bit_count():
+    # fixed-length coding: total bytes == ceil(n*width/8) whenever n*width
+    # is a multiple of 8 (power-of-two lanes) — no hidden padding
+    for n in (8, 64, 1024, 16384):
+        for width in range(1, 17):
+            got = bitio.packed_nbytes(n, width)
+            assert got == (n * width + 7) // 8, (n, width, got)
+
+
+def test_batched_leading_dims():
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.integers(0, 8, size=(3, 5, 64), dtype=np.uint16))
+    packed = bitio.pack_fixed(vals, 3)
+    assert packed.shape == (3, 5, bitio.packed_nbytes(64, 3))
+    out = bitio.unpack_fixed(packed, 64, 3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+
+
+@given(st.integers(1, 15), st.integers(3, 10), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_property(width, log_n, seed):
+    n = 1 << log_n
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1 << width, size=n, dtype=np.uint16)
+    out = bitio.unpack_fixed(bitio.pack_fixed(jnp.asarray(vals), width),
+                             n, width)
+    np.testing.assert_array_equal(np.asarray(out), vals)
+
+
+def test_bool_mask_roundtrip():
+    rng = np.random.default_rng(1)
+    bits = jnp.asarray(rng.random((4, 128)) < 0.3)
+    packed = bitio.pack_bool_mask(bits)
+    assert packed.shape == (4, 16)
+    out = bitio.unpack_bool_mask(packed, 128)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(bits))
+
+
+@given(st.integers(1, 12), st.integers(0, 200), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_np_exact_bits_roundtrip(width, count, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1 << width, size=count, dtype=np.uint32)
+    buf = bitio.np_pack_bits_exact(vals, width)
+    assert len(buf) == (count * width + 7) // 8
+    out = bitio.np_unpack_bits_exact(buf, count, width)
+    np.testing.assert_array_equal(out, vals)

@@ -1,0 +1,126 @@
+"""End-to-end codec losslessness: the paper's headline property
+("bit-identical reconstruction", §VI-A) under adversarial inputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BF16, FP16, FP32, compress_array, compress_tree,
+                        decompress_array, decompress_tree, search_for_array,
+                        tree_ratio)
+from repro.core import wire
+from conftest import make_realistic_bf16
+
+
+def _bits(x):
+    dt = np.uint16 if x.dtype != jnp.float32 else np.uint32
+    return np.asarray(jax.device_get(x)).view(dt)
+
+
+DTYPES = [jnp.bfloat16, jnp.float16, jnp.float32]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_lossless_with_specials(dtype):
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal(40_000) * 0.02).astype("float32")
+    x[:8] = [0.0, -0.0, np.inf, -np.inf, np.nan, -np.nan, 1e-40, -1e-40]
+    x = jnp.asarray(x).astype(dtype)
+    ct = compress_array(x)
+    y = decompress_array(ct)
+    np.testing.assert_array_equal(_bits(x), _bits(y))
+
+
+@given(st.integers(0, 2**31), st.sampled_from(["narrow", "wide", "const",
+                                               "tiny", "denormal"]))
+@settings(max_examples=20, deadline=None)
+def test_lossless_property(seed, kind):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 50_000))
+    if kind == "narrow":
+        w = rng.standard_normal(n) * 0.02
+    elif kind == "wide":
+        w = rng.standard_normal(n) * np.exp(rng.standard_normal(n) * 4)
+    elif kind == "const":
+        w = np.full(n, float(rng.standard_normal()))
+    elif kind == "tiny":
+        w = rng.standard_normal(n) * 1e-30
+    else:
+        w = rng.standard_normal(n) * 1e-42  # subnormal territory
+    x = jnp.asarray(w.astype("float32")).astype(jnp.bfloat16)
+    y = decompress_array(compress_array(x))
+    np.testing.assert_array_equal(_bits(x), _bits(y))
+
+
+def test_realistic_ratio_matches_paper():
+    """BF16 trained-like weights: ratio ~1.35 and params ~(122,6,3,16)
+    (paper Tables II & IV)."""
+    x = make_realistic_bf16(2_000_000)
+    ct = compress_array(x)
+    assert ct.mode == "enec"
+    b, n, m, L = ct.params.astuple()
+    assert n == 6 and m == 3 and L == 16, ct.params
+    assert 118 <= b <= 126, b
+    assert 1.30 <= ct.ratio() <= 1.42, ct.ratio()
+
+
+def test_wire_roundtrip_all_dtypes():
+    rng = np.random.default_rng(3)
+    for dtype in DTYPES:
+        x = jnp.asarray((rng.standard_normal(30_000) * 0.02
+                         ).astype("float32")).astype(dtype)
+        ct = compress_array(x)
+        ct2 = wire.from_wire(wire.to_wire(ct))
+        y = decompress_array(ct2)
+        np.testing.assert_array_equal(_bits(x), _bits(y))
+
+
+def test_sharded_compression_roundtrip():
+    x = make_realistic_bf16(100_000, seed=7)
+    for shards in (1, 2, 4):
+        ct = compress_array(x, shards=shards)
+        y = decompress_array(ct)
+        np.testing.assert_array_equal(_bits(x), _bits(y))
+
+
+def test_raw_escape_never_worse():
+    rng = np.random.default_rng(5)
+    # adversarial: full-entropy bits — must fall back to raw, ratio ~1
+    x = jnp.asarray(rng.integers(0, 2**16, 50_000, dtype=np.uint16)
+                    ).view(jnp.bfloat16)
+    ct = compress_array(x)
+    y = decompress_array(ct)
+    np.testing.assert_array_equal(_bits(x), _bits(y))
+    assert ct.ratio() >= 0.99
+
+
+def test_transferred_params_stay_lossless():
+    """Paper §VI-E: params searched on model A applied to model B."""
+    a = make_realistic_bf16(500_000, seed=1)
+    b = make_realistic_bf16(500_000, seed=2, outlier_frac=1e-2)
+    p = search_for_array(np.asarray(jax.device_get(a)), BF16)
+    ct = compress_array(b, p)  # may widen internally
+    y = decompress_array(ct)
+    np.testing.assert_array_equal(_bits(b), _bits(y))
+
+
+def test_tree_api_and_ratio():
+    tree = {"w1": make_realistic_bf16(70_000, seed=3),
+            "nested": {"w2": make_realistic_bf16(50_000, seed=4)},
+            "step": jnp.asarray(3, jnp.int32)}
+    ctree = compress_tree(tree)
+    out = decompress_tree(ctree)
+    np.testing.assert_array_equal(_bits(tree["w1"]), _bits(out["w1"]))
+    np.testing.assert_array_equal(_bits(tree["nested"]["w2"]),
+                                  _bits(out["nested"]["w2"]))
+    assert int(out["step"]) == 3
+    stats = tree_ratio(ctree)
+    assert stats["tensors"] == 3 and stats["ratio"] > 1.0
+
+
+def test_multidim_shapes_preserved():
+    x = make_realistic_bf16(4 * 333 * 17, seed=9).reshape(4, 333, 17)
+    y = decompress_array(compress_array(x))
+    assert y.shape == (4, 333, 17) and y.dtype == x.dtype
+    np.testing.assert_array_equal(_bits(x).ravel(), _bits(y).ravel())

@@ -1,0 +1,46 @@
+"""Collective parsing + ring-model wire accounting (launch/hlo_stats.py)."""
+from repro.launch.hlo_stats import collective_stats, wire_bytes
+
+
+HLO_SAMPLE = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[2,32768,4096]{2,1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[128,64]{1,0} reduce-scatter(%z), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = bf16[8,128]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %ard = f32[4,4]{1,0} all-reduce-done(%ar2)
+  %ags = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) all-gather-start(%a, %b), replica_groups=[4,4]<=[16]
+"""
+
+
+def test_parses_all_kinds():
+    s = collective_stats(HLO_SAMPLE)
+    assert s["all-gather"]["count"] == 2          # ag + ag-start (done skipped)
+    assert s["all-reduce"]["count"] == 1
+    assert s["reduce-scatter"]["count"] == 1
+    assert s["collective-permute"]["count"] == 1
+    assert s["total_count"] == 5
+
+
+def test_result_bytes():
+    s = collective_stats(HLO_SAMPLE)
+    assert s["all-reduce"]["result_bytes"] == 2 * 32768 * 4096 * 4
+    assert s["reduce-scatter"]["result_bytes"] == 128 * 64 * 4
+    # tuple-shaped start op sums both elements
+    assert s["all-gather"]["result_bytes"] == 16 * 1024 * 2 + 2 * (4 * 8 * 2)
+
+
+def test_ring_formulas():
+    assert wire_bytes("all-reduce", 100, 4) == 2 * 0.75 * 100
+    assert wire_bytes("all-gather", 100, 4) == 0.75 * 100
+    assert wire_bytes("reduce-scatter", 100, 4) == 300
+    assert wire_bytes("collective-permute", 100, 4) == 100
+    assert wire_bytes("all-reduce", 100, 1) == 0.0
+
+
+def test_group_size_detection():
+    s = collective_stats(HLO_SAMPLE)
+    # ar uses explicit groups of 4 -> 2*(3/4)*bytes
+    rb = s["all-reduce"]["result_bytes"]
+    assert abs(s["all-reduce"]["wire_bytes"] - 2 * 0.75 * rb) < 1
+    # ag uses iota [16,16] -> group size 16
+    # (first instr 16*1024*2 bytes at (15/16))

@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward/train step on CPU, output shapes + no NaNs; serve path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build_model
+from repro.models.registry import input_specs, param_count
+from repro.configs.base import SHAPES, shape_applicable
+
+
+def _batch(cfg, rng, B=2, T=16):
+    if cfg.is_encdec:
+        pb = {"frames": jax.random.normal(rng, (B, T, cfg.d_model),
+                                          jnp.bfloat16),
+              "tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
+        return dict(pb, targets=jax.random.randint(rng, (B, T), 0,
+                                                   cfg.vocab_size)), pb
+    tt = T - cfg.prefix_embed
+    batch = {"tokens": jax.random.randint(rng, (B, tt), 0, cfg.vocab_size),
+             "targets": jax.random.randint(rng, (B, tt), 0, cfg.vocab_size)}
+    if cfg.prefix_embed:
+        batch["prefix_embeds"] = jax.random.normal(
+            rng, (B, cfg.prefix_embed, cfg.d_model), jnp.bfloat16)
+    pb = {k: v for k, v in batch.items() if k != "targets"}
+    return batch, pb
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.key(0)
+    params = model.init(rng)
+    batch, _ = _batch(cfg, rng)
+    loss, metrics = model.loss_fn(params, batch)
+    assert loss.shape == () and bool(jnp.isfinite(loss)), arch
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.isfinite(g.astype(jnp.float32)).all()), (arch, path)
+    # one SGD step changes the loss (graph is connected)
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - 0.5 * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    loss2, _ = model.loss_fn(new_params, batch)
+    assert bool(jnp.isfinite(loss2))
+    assert float(loss2) != float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_serve_path(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.key(1)
+    params = model.init(rng)
+    _, pb = _batch(cfg, rng)
+    logits, cache = model.prefill_fn(params, pb, 32)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = model.decode_fn(params, cache, tok)
+        assert logits.shape == (2, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), arch
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert int(cache["lengths"][0]) == 16 + 3
+
+
+def test_decode_matches_teacher_forcing_dense():
+    cfg = get_smoke_config("llama3_2_1b")
+    model = build_model(cfg)
+    rng = jax.random.key(2)
+    params = model.init(rng)
+    batch, pb = _batch(cfg, rng)
+    logits, cache = model.prefill_fn(params, pb, 32)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dec_logits, _ = model.decode_fn(params, cache, tok)
+    tf_batch = {"tokens": jnp.concatenate([pb["tokens"], tok[:, None]], 1)}
+    tf_logits, _ = model.prefill_fn(params, tf_batch, 33)
+    assert float(jnp.abs(tf_logits - dec_logits).max()) < 0.1  # bf16 noise
+
+
+def test_ssm_state_handoff_exact():
+    cfg = get_smoke_config("xlstm_125m")
+    model = build_model(cfg)
+    rng = jax.random.key(3)
+    params = model.init(rng)
+    batch, pb = _batch(cfg, rng)
+    logits, cache = model.prefill_fn(params, pb, 32)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dec_logits, _ = model.decode_fn(params, cache, tok)
+    tf_batch = {"tokens": jnp.concatenate([pb["tokens"], tok[:, None]], 1)}
+    tf_logits, _ = model.prefill_fn(params, tf_batch, 33)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(tf_logits), atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact_sizes(arch):
+    """The full configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen3_32b": (64, 5120, 64, 8, 25600, 151936),
+        "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+        "llama3_2_1b": (16, 2048, 32, 8, 8192, 128256),
+        "stablelm_3b": (32, 2560, 32, 32, 6912, 50304),
+        "whisper_tiny": (4, 384, 6, 6, 1536, 51865),
+        "paligemma_3b": (18, 2048, 8, 1, 16384, 257216),
+        "qwen3_moe_235b_a22b": (94, 4096, 64, 4, 1536, 151936),
+        "phi3_5_moe_42b_a6_6b": (32, 4096, 32, 8, 6400, 32064),
+        "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+        "jamba_v0_1_52b": (32, 4096, 32, 8, 14336, 65536),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+
+
+def test_moe_expert_counts():
+    assert get_config("qwen3_moe_235b_a22b").n_experts == 128
+    assert get_config("qwen3_moe_235b_a22b").experts_per_token == 8
+    assert get_config("phi3_5_moe_42b_a6_6b").n_experts == 16
+    assert get_config("phi3_5_moe_42b_a6_6b").experts_per_token == 2
+    assert get_config("jamba_v0_1_52b").n_experts == 16
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for name, shape in SHAPES.items():
+            ok, _ = shape_applicable(cfg, name)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            assert specs, (arch, name)
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_long_500k_skips_are_exactly_full_attention_archs():
+    skipped = [a for a in ARCH_IDS
+               if not shape_applicable(get_config(a), "long_500k")[0]]
+    assert set(skipped) == {
+        "qwen3_32b", "minitron_4b", "llama3_2_1b", "stablelm_3b",
+        "whisper_tiny", "paligemma_3b", "qwen3_moe_235b_a22b",
+        "phi3_5_moe_42b_a6_6b"}
+
+
+def test_param_counts_near_nameplate():
+    """Full-size configs land near their nameplate parameter counts."""
+    approx = {"qwen3_32b": 32.8e9, "llama3_2_1b": 1.24e9,
+              "qwen3_moe_235b_a22b": 235e9, "xlstm_125m": 0.125e9}
+    for arch, expect in approx.items():
+        n = param_count(get_config(arch))
+        assert 0.75 * expect < n < 1.35 * expect, (arch, n, expect)

@@ -1,0 +1,74 @@
+"""Parameter-search machinery (§V-E): Eq. 1 base width, Eq. 3 cost, Eq. 4
+joint search, widening escape, and the joint-search improvement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BF16, FP16
+from repro.core.params import (base_width_for, expected_ratio, search,
+                               widen_for_range)
+
+
+def _paper_like_hist():
+    """Histogram matching Obs. 5: geometric bulk around 120 + rare high
+    outliers (Fig. 3 red circle)."""
+    hist = np.zeros(256, np.int64)
+    for e in range(96, 127):
+        hist[e] = int(1e7 * 0.55 ** abs(120 - e))
+    hist[127:133] = 40  # outliers
+    return hist
+
+
+def test_search_matches_table4():
+    p = search(_paper_like_hist(), BF16)
+    assert p.n == 6 and p.L == 16
+    assert 118 <= p.b <= 124
+    assert p.m in (3, 4)
+    assert 1.25 <= expected_ratio(p, BF16) <= 1.45
+
+
+def test_eq1_base_width_injective():
+    for l, h in [(96, 132), (0, 255), (120, 121), (50, 50)]:
+        for b in range(l, h + 1):
+            n = base_width_for(b, l, h)
+            ys = {(b - x) % (1 << n) for x in range(l, h + 1)}
+            assert len(ys) == h - l + 1, (l, h, b, n)
+
+
+def test_joint_search_never_worse():
+    hist = _paper_like_hist()
+    p_paper = search(hist, BF16, mode="paper")
+    p_joint = search(hist, BF16, mode="joint")
+    assert p_joint.expected_bits <= p_paper.expected_bits + 1e-9
+
+
+def test_widen_escape_covers_new_range():
+    p = search(_paper_like_hist(), BF16)
+    w = widen_for_range(p, 10, 200)
+    assert w.l <= 10
+    assert (200 - w.l) < (1 << w.n)  # injective over the widened range
+    assert (w.b, w.L) == (p.b, p.L)  # structural params preserved
+
+
+def test_fp16_narrow_exponent():
+    hist = np.zeros(32, np.int64)
+    for e in range(5, 20):
+        hist[e] = int(1e6 * 0.6 ** abs(12 - e))
+    p = search(hist, FP16)
+    assert p.n <= 6 and p.b in range(5, 20)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_search_handles_random_histograms(seed):
+    rng = np.random.default_rng(seed)
+    hist = rng.integers(0, 1000, 256).astype(np.int64)
+    hist[rng.random(256) < 0.7] = 0
+    if hist.sum() == 0:
+        hist[128] = 1
+    p = search(hist, BF16)
+    nz = np.nonzero(hist)[0]
+    l, h = int(nz[0]), int(nz[-1])
+    assert (h - l) < (1 << p.n)      # always injective
+    assert 1 <= p.m <= p.n
+    assert p.L in (16, 32, 64, 128)

@@ -1,0 +1,79 @@
+"""Roofline math: scan-period correction, model FLOPs, term derivation."""
+import json
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch.roofline import (_corrected, analyze_cell,
+                                   model_flops_per_device)
+
+
+def _fake_rec(p0f, p1f, periods, full=None):
+    def cell(f):
+        return {"cost": {"flops": f, "bytes accessed": 10 * f},
+                "collectives": {"total_wire_bytes": f / 100},
+                "memory": {"peak_memory_in_bytes": 1 << 30}}
+    e = {"status": "ok", "full": cell(full if full is not None else p1f)}
+    if p0f is not None:
+        e["p0"], e["p1"] = cell(p0f), cell(p1f)
+    return {"arch": "llama3_2_1b", "shape": "train_4k", "n_periods": periods,
+            "single": e, "multi": {"status": "ok"}, "layers_mode": "scan"}
+
+
+def test_period_correction_linear():
+    rec = _fake_rec(p0f=1e9, p1f=3e9, periods=16)
+    got = _corrected(rec["single"], ("cost", "flops"), 16)
+    assert got == 1e9 + 16 * 2e9
+
+
+def test_correction_falls_back_to_full_when_unrolled():
+    rec = _fake_rec(p0f=None, p1f=None, periods=16, full=7e9)
+    got = _corrected(rec["single"], ("cost", "flops"), 16)
+    assert got == 7e9
+
+
+def test_model_flops_6nd_train():
+    cfg = get_config("llama3_2_1b")
+    shape = SHAPES["train_4k"]
+    mf = model_flops_per_device(cfg, shape)
+    n = 1.24e9
+    tokens = 256 * 4096
+    assert abs(mf - 6 * n * tokens / 256) / mf < 0.15
+
+
+def test_moe_uses_active_params():
+    dense = model_flops_per_device(get_config("qwen3_32b"),
+                                   SHAPES["train_4k"])
+    moe = model_flops_per_device(get_config("qwen3_moe_235b_a22b"),
+                                 SHAPES["train_4k"])
+    # 22B active < 32.8B dense despite 235B total
+    assert moe < dense
+
+
+def test_analyze_cell_terms_and_dominant():
+    rec = _fake_rec(p0f=1e12, p1f=2e12, periods=16)
+    out = analyze_cell(rec)
+    assert out["status"] == "ok"
+    assert out["compute_s"] == pytest.approx(out["flops"] / 197e12, abs=1e-6)
+    assert out["memory_s"] == pytest.approx(out["bytes"] / 819e9, abs=1e-6)
+    assert out["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert 0 <= out["roofline_fraction"]
+
+
+def test_analyze_cell_skip_passthrough():
+    out = analyze_cell({"arch": "llama3_2_1b", "shape": "long_500k",
+                        "status": "skipped", "reason": "SKIP(full-attn)"})
+    assert out["status"] == "skipped"
+
+
+def test_real_artifacts_if_present():
+    path = "results/roofline.json"
+    try:
+        rows = json.loads(open(path).read())
+    except FileNotFoundError:
+        pytest.skip("no dry-run artifacts in this checkout")
+    ok = [r for r in rows if r["status"] == "ok"]
+    assert len(ok) >= 30          # 32 applicable cells
+    assert all(r["multi_pod_ok"] for r in ok)
+    skips = [r for r in rows if r["status"] == "skipped"]
+    assert len(skips) == 8

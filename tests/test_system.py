@@ -1,0 +1,71 @@
+"""End-to-end behaviour tests for the paper's system: compress a model's
+weights, verify bit-identical reconstruction + paper-level ratios, and run
+the serve path from compressed state (the §VI-C scenario, CPU-scale)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import compress_tree, decompress_tree, tree_ratio
+from repro.data.synthetic_weights import PAPER_MODELS, generate
+from repro.models import build_model
+from repro.runtime.streaming import (compress_params_for_streaming,
+                                     decompress_sliced)
+
+
+def test_paper_table2_style_ratios():
+    """BF16 sets compress ~1.35x, FP16 ~1.1x, FP32 ~1.15x (paper Table II)."""
+    bands = {"bf16": (1.25, 1.45), "fp16": (1.04, 1.25),
+             "fp32": (1.08, 1.25)}
+    for spec in PAPER_MODELS[:2] + PAPER_MODELS[5:6] + PAPER_MODELS[8:9]:
+        x = generate(dataclasses.replace(spec, n_elems=1 << 20))
+        from repro.core import compress_array, decompress_array
+        ct = compress_array(x)
+        lo, hi = bands[spec.dtype]
+        assert lo <= ct.ratio() <= hi, (spec.name, ct.ratio())
+        y = decompress_array(ct)
+        dt = np.uint16 if spec.dtype != "fp32" else np.uint32
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(x)).view(dt),
+            np.asarray(jax.device_get(y)).view(dt))
+
+
+def test_whole_model_compress_roundtrip():
+    cfg = get_smoke_config("qwen3_32b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    ctree = compress_tree(params)
+    restored = decompress_tree(ctree)
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(restored)[0]):
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8),
+            err_msg=str(pa))
+    stats = tree_ratio(ctree)
+    assert stats["ratio"] >= 0.99  # random-init tiny tensors: raw escape ok
+
+
+def test_serve_from_compressed_weights_end_to_end():
+    """The paper's inference scenario: weights resident compressed,
+    decompressed layer-wise inside the step, outputs bit-identical."""
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    streamed = compress_params_for_streaming(params, min_bytes=1024, shards=2)
+    rng = jax.random.key(2)
+    pb = {"tokens": jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)}
+    l_ref, c_ref = model.prefill_fn(params, pb, 24)
+    l_str, c_str = model.prefill_fn(streamed, pb, 24,
+                                    decompressor=decompress_sliced)
+    assert float(jnp.abs(l_ref - l_str).max()) == 0.0
+    tok = jnp.argmax(l_str, -1).astype(jnp.int32)
+    for _ in range(4):
+        d_ref, c_ref = model.decode_fn(params, c_ref, tok)
+        d_str, c_str = model.decode_fn(streamed, c_str, tok,
+                                       decompressor=decompress_sliced)
+        assert float(jnp.abs(d_ref - d_str).max()) == 0.0
+        tok = jnp.argmax(d_str, -1).astype(jnp.int32)

@@ -1,0 +1,47 @@
+"""Training-loop integration: runs, checkpoints, resumes deterministically."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime.train_loop import TrainLoopConfig, WatchdogConfig, run
+
+
+def _setup(tmp_path):
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True, remat=False)
+    model = build_model(cfg)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4, seed=11)
+    ckpt = CheckpointManager(tmp_path / "ckpt", keep_last=2)
+    return model, data_cfg, ckpt
+
+
+def test_loss_decreases_and_checkpoints(tmp_path):
+    model, data_cfg, ckpt = _setup(tmp_path)
+    out = run(model, adamw.AdamWConfig(lr=3e-3), data_cfg,
+              TrainLoopConfig(total_steps=8, ckpt_every=4, log_every=1),
+              ckpt=ckpt)
+    hist = out["history"]
+    assert len(hist) == 8
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert ckpt.latest_step() == 8
+
+
+def test_resume_continues_from_checkpoint(tmp_path):
+    model, data_cfg, ckpt = _setup(tmp_path)
+    run(model, adamw.AdamWConfig(lr=3e-3), data_cfg,
+        TrainLoopConfig(total_steps=4, ckpt_every=2, log_every=1), ckpt=ckpt)
+    assert ckpt.latest_step() == 4
+    out = run(model, adamw.AdamWConfig(lr=3e-3), data_cfg,
+              TrainLoopConfig(total_steps=6, ckpt_every=10, log_every=1),
+              ckpt=ckpt)
+    steps = [h["step"] for h in out["history"]]
+    assert steps == [4, 5], steps  # resumed at 4, not 0

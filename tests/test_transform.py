@@ -1,0 +1,40 @@
+"""Branch-free linear transform: exact-inverse property over valid params."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transform
+from repro.core.params import base_width_for
+
+
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_forward_inverse_roundtrip(l, h, seed):
+    if l > h:
+        l, h = h, l
+    b = (l + h) // 2
+    n = base_width_for(b, l, h)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(l, h + 1, size=257, dtype=np.uint16))
+    y = transform.forward(x, b, n)
+    assert int(jnp.max(y)) < (1 << n)
+    back = transform.inverse(y, b, n, l)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(st.integers(0, 255), st.integers(0, 255))
+@settings(max_examples=60, deadline=None)
+def test_injectivity_on_range(l, h):
+    if l > h:
+        l, h = h, l
+    b = l + (h - l) * 3 // 4  # off-center b still injective per Eq. 1 guard
+    n = base_width_for(b, l, h)
+    xs = jnp.arange(l, h + 1, dtype=jnp.uint16)
+    ys = np.asarray(transform.forward(xs, b, n))
+    assert len(np.unique(ys)) == h - l + 1, "linear map must be injective"
+
+
+def test_paper_example():
+    # §V-C worked example: b=123, x=125 -> -2 -> 2^6-2 = 62 (n=6); x=122 -> 1
+    y = transform.forward(jnp.asarray([125, 122], jnp.uint16), 123, 6)
+    np.testing.assert_array_equal(np.asarray(y), [62, 1])
