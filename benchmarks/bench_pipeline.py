@@ -1,0 +1,212 @@
+"""Whole-tree compression pipeline: seed per-layer loop vs device-resident
+stacked path (ISSUE 1 tentpole).
+
+The legacy path below is a faithful copy of the seed pipeline: per tensor it
+moved the FULL stack to the host for the parameter search, then compressed
+each layer with its own jit dispatch (host round-trip for the widening
+check, blocking ``device_get`` for the wire-size escape), and finally
+``jnp.stack``-copied the L stream pytrees.  The new path is
+``compress_params_for_streaming`` on top of ``compress_stacked_many``:
+device-side stats, one tiny host transfer per tree, one encode dispatch per
+layer-stack bucket.
+
+Both a cold run (caches cleared — the production compress-once-per-model
+scenario, where compile count dominates) and a warm steady state are timed,
+on synthetic llama3_2_1b / qwen3_32b layer stacks (real layer counts,
+CPU-scaled widths).
+"""
+from __future__ import annotations
+
+import functools
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api as enec_api
+from repro.core import codec, params as params_mod
+from repro.core.api import CompressedTensor
+from repro.core.dtypes import FORMATS, format_for
+from repro.runtime.streaming import (StreamedWeight,
+                                     compress_params_for_streaming)
+
+# real layer counts, widths scaled for a CPU bench.  Layer slices of 1-2
+# blocks put the run in the dispatch/round-trip-bound regime that the NPU
+# deployment actually lives in (there the codec kernel runs at memory speed
+# and per-tensor host synchronization is what serializes the pipeline);
+# Table VI shows compression ratios are size-independent.
+MODELS = {
+    "llama3_2_1b": dict(n_layers=16, d=128, d_kv=128, d_ff=256),
+    "qwen3_32b": dict(n_layers=64, d=128, d_kv=128, d_ff=256),
+}
+SHARDS = 1
+COLD_ITERS = 2
+WARM_ITERS = 5
+
+
+def synthetic_stacked_params(arch: str) -> dict:
+    """A trained-LLM-like stacked weight tree (paper §III statistics)."""
+    spec = MODELS[arch]
+    L, d, d_kv, d_ff = spec["n_layers"], spec["d"], spec["d_kv"], spec["d_ff"]
+    # stable digest, NOT hash(): PYTHONHASHSEED would reroll the weights
+    # (and thus ratios/timings) every process
+    rng = np.random.default_rng(zlib.crc32(arch.encode()))
+
+    def gen(*shape):
+        n = int(np.prod(shape))
+        # per-tensor scale variation: distinct leaves get distinct searched
+        # params, exactly as trained checkpoints do
+        w = rng.standard_normal(n) * rng.uniform(0.008, 0.03)
+        w[rng.random(n) < 2e-3] *= 64.0
+        return jnp.asarray(w.astype(np.float32)).astype(jnp.bfloat16
+                                                        ).reshape(shape)
+
+    return {"period": [{
+        "attn": {"wq": gen(L, d, d), "wk": gen(L, d, d_kv),
+                 "wv": gen(L, d, d_kv), "wo": gen(L, d, d)},
+        "mlp": {"w_gate": gen(L, d, d_ff), "w_up": gen(L, d, d_ff),
+                "w_down": gen(L, d_ff, d)},
+    }]}
+
+
+# ---------------------------------------------------------------------------
+# legacy (seed) per-layer pipeline, kept verbatim for the comparison
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=512)
+def _legacy_jit_encode(fmt_name: str, p):
+    fmt = FORMATS[fmt_name]
+    return jax.jit(lambda bits: codec.encode_blocks(bits, fmt, p))
+
+
+def _legacy_compress_array(x, p, shards: int) -> CompressedTensor:
+    """Seed ``compress_array``: full host round-trip + per-tensor sync."""
+    fmt = format_for(x.dtype)
+    host = np.asarray(jax.device_get(x))                  # FULL tensor -> host
+    bits_h = np.ascontiguousarray(host).view(fmt.np_uint_dtype)
+    exp = (bits_h >> fmt.mant_bits) & fmt.exp_mask
+    p = params_mod.widen_for_range(p, int(exp.min()), int(exp.max()))
+    bits = codec.to_blocks(x, fmt)
+    nblocks = bits.shape[0]
+    if shards > 1:
+        extra = (-nblocks) % shards
+        if extra:
+            bits = jnp.concatenate(
+                [bits, jnp.zeros((extra, bits.shape[1]), bits.dtype)])
+    streams = _legacy_jit_encode(fmt.name, p)(bits)       # dispatch per layer
+    if shards > 1:
+        streams = jax.tree.map(
+            lambda a: a.reshape((shards, a.shape[0] // shards) + a.shape[1:]),
+            streams)
+    ct = CompressedTensor(
+        streams=streams, raw_bytes=None, fmt_name=fmt.name, params=p,
+        shape=tuple(x.shape), dtype_str=str(x.dtype),
+        block_elems=params_mod.DEFAULT_BLOCK_ELEMS, shards=shards, mode="enec")
+    ct.nbytes_wire()                                      # blocking sync/tensor
+    return ct
+
+
+def legacy_compress_tree(params, shards: int = SHARDS):
+    """Seed ``compress_params_for_streaming``: O(#layers) dispatches."""
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for leaf in flat:
+        n_layers = leaf.shape[0]
+        p = params_mod.search_for_array(                  # FULL stack -> host
+            np.asarray(jax.device_get(leaf)), format_for(leaf.dtype))
+        cts = [_legacy_compress_array(leaf[i], p, shards)
+               for i in range(n_layers)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *cts)
+        out.append(stacked)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stacked_compress_tree(params, shards: int = SHARDS):
+    return compress_params_for_streaming(params, min_bytes=1024, shards=shards)
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+def _clear_all_caches():
+    jax.clear_caches()
+    _legacy_jit_encode.cache_clear()
+    enec_api.reset_encode_cache_stats(clear_cache=True)
+
+
+def _time_once(fn, params) -> float:
+    t0 = time.perf_counter()
+    out = fn(params)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def _time_cold(fn, params) -> float:
+    ts = []
+    for _ in range(COLD_ITERS):
+        _clear_all_caches()
+        ts.append(_time_once(fn, params))
+    return float(np.min(ts))
+
+
+def _time_warm(fn, params) -> float:
+    _time_once(fn, params)
+    # min over iters: robust to scheduler noise on a shared bench box
+    return float(np.min([_time_once(fn, params)
+                         for _ in range(WARM_ITERS)]))
+
+
+def _verify_lossless(params, streamed) -> None:
+    flat_in = jax.tree_util.tree_leaves(params)
+    flat_out = jax.tree_util.tree_leaves(
+        streamed, is_leaf=lambda x: isinstance(x, StreamedWeight))
+    for x, sw in zip(flat_in, flat_out):
+        assert isinstance(sw, StreamedWeight), "leaf unexpectedly dense"
+        dec = jnp.moveaxis(enec_api.decompress_stacked(sw.ct), 1,
+                           1 + sw.tp_axis)
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(x)).view(np.uint16),
+            np.asarray(jax.device_get(dec)).view(np.uint16))
+
+
+def run():
+    rows = []
+    for arch in MODELS:
+        params = synthetic_stacked_params(arch)
+        streamed = stacked_compress_tree(params)
+        _verify_lossless(params, streamed)
+
+        legacy_cold = _time_cold(legacy_compress_tree, params)
+        _clear_all_caches()
+        stacked_cold = _time_cold(stacked_compress_tree, params)
+        legacy_warm = _time_warm(legacy_compress_tree, params)
+        _clear_all_caches()
+        stacked_warm = _time_warm(stacked_compress_tree, params)
+        # dispatch/compile accounting for ONE whole-tree compression
+        _clear_all_caches()
+        jax.block_until_ready(stacked_compress_tree(params))
+        st = enec_api.encode_cache_stats()
+
+        n_leaves = len(jax.tree_util.tree_leaves(params))
+        n_layers = MODELS[arch]["n_layers"]
+        rows += [
+            (f"pipeline_tree/{arch}/legacy_cold", legacy_cold * 1e6,
+             f"{n_leaves * n_layers}_encode_dispatches"),
+            (f"pipeline_tree/{arch}/stacked_cold", stacked_cold * 1e6,
+             f"{st['dispatches']}_encode_dispatches_{st['compiles']}_compiles"),
+            (f"pipeline_tree/{arch}/legacy_warm", legacy_warm * 1e6, ""),
+            (f"pipeline_tree/{arch}/stacked_warm", stacked_warm * 1e6, ""),
+            (f"pipeline_tree/{arch}/speedup_cold", 0.0,
+             f"{legacy_cold / stacked_cold:.2f}x"),
+            (f"pipeline_tree/{arch}/speedup_warm", 0.0,
+             f"{legacy_warm / stacked_warm:.2f}x"),
+        ]
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   bench_ablation    Fig. 13    (V0 -> V3)
   bench_params      Table IV   (searched params + Eq. 4 formula check)
   bench_transfer    Table V    (parameter transferability)
+  bench_pipeline    ISSUE 1    (whole-tree compression: per-layer vs stacked)
   bench_e2e         Fig. 10    (TTFT/TPOT dense vs ENEC-streamed + derived)
 """
 from __future__ import annotations
@@ -17,9 +18,11 @@ import traceback
 
 def main() -> None:
     from . import (bench_ablation, bench_blocksize, bench_e2e, bench_params,
-                   bench_ratio, bench_throughput, bench_transfer)
+                   bench_pipeline, bench_ratio, bench_throughput,
+                   bench_transfer)
     modules = [bench_ratio, bench_throughput, bench_blocksize,
-               bench_ablation, bench_params, bench_transfer, bench_e2e]
+               bench_ablation, bench_params, bench_transfer, bench_pipeline,
+               bench_e2e]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

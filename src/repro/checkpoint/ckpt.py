@@ -29,10 +29,13 @@ from pathlib import Path
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api as enec_api
 from repro.core import wire as enec_wire
+
+_ENEC_DTYPES = (jnp.bfloat16, jnp.float16, jnp.float32)
 
 
 def _tree_paths(tree):
@@ -57,13 +60,17 @@ class CheckpointManager:
 
     def save(self, step: int, tree, *, blocking: bool = False) -> None:
         self.wait()
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                                 tree)
+        names, leaves, _ = _tree_paths(tree)
+        # compression runs device-resident BEFORE any host transfer: only
+        # compressed streams (and the raw non-float leaves) ever cross to the
+        # host, and repeated (shape, dtype) float leaves share one stacked
+        # encode dispatch (docs/PIPELINE.md)
+        payload = self._prepare(leaves)
         if blocking:
-            self._save_host(step, host_tree)
+            self._save_host(step, names, payload)
             return
         self._thread = threading.Thread(
-            target=self._save_host, args=(step, host_tree), daemon=True)
+            target=self._save_host, args=(step, names, payload), daemon=True)
         self._thread.start()
 
     def wait(self):
@@ -71,9 +78,45 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def _save_host(self, step: int, host_tree) -> None:
+    def _prepare(self, leaves):
+        """Per-leaf ("ct", CompressedTensor) or ("np", host array) payload."""
+        payload: list = [None] * len(leaves)
+        float_slots, other_slots = [], []
+        for i, leaf in enumerate(leaves):
+            dt = getattr(leaf, "dtype", None)   # dtype check without a copy
+            if (self.compress and dt is not None
+                    and jnp.dtype(dt) in _ENEC_DTYPES):
+                float_slots.append(i)
+            else:
+                other_slots.append(i)
+        if other_slots:   # one batched transfer for all uncompressed leaves
+            hosts = jax.device_get([leaves[i] for i in other_slots])
+            for i, h in zip(other_slots, hosts):
+                payload[i] = ("np", np.asarray(h))
+        # every float leaf rides the batched pipeline as its own L=1 stack:
+        # per-leaf searched params (ratio parity with the seed — unrelated
+        # same-shape tensors like weights vs Adam moments must NOT share
+        # params), no jnp.stack duplicate on device, while statistics, the
+        # never-worse wire check, and encode dispatches all stay batched —
+        # leaves whose (n, m, L) coincide share one concatenated dispatch
+        # via the encoder's dynamic-b bucketing.
+        cts = enec_api.compress_stacked_many(
+            [jnp.asarray(leaves[i])[None] for i in float_slots])
+        for i, ct in zip(float_slots, cts):
+            if ct is None:
+                # const / incompressible / empty: per-leaf escape path.
+                # compress_array repeats the stats pass (and, for the rare
+                # incompressible leaf, the encode) — accepted so the stacked
+                # API keeps its simple Optional contract; const leaves
+                # short-circuit before encoding.
+                payload[i] = ("ct",
+                              enec_api.compress_array(jnp.asarray(leaves[i])))
+            else:
+                payload[i] = ("ct", enec_api.slice_stacked(ct, 0))
+        return payload
+
+    def _save_host(self, step: int, names, payload) -> None:
         t0 = time.time()
-        names, leaves, treedef = _tree_paths(host_tree)
         final = self.root / f"step_{step:012d}"
         tmp = self.root / f".tmp-step_{step:012d}"
         if tmp.exists():
@@ -81,23 +124,24 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
         manifest = {"step": step, "leaves": [], "format": "enec-v1"}
         raw_total = comp_total = 0
-        for i, (name, leaf) in enumerate(zip(names, leaves)):
-            leaf = np.asarray(leaf)
-            entry = {"name": name, "index": i, "shape": list(leaf.shape),
-                     "dtype": str(leaf.dtype)}
+        for i, (name, (tag, obj)) in enumerate(zip(names, payload)):
             blob_path = tmp / f"t_{i:05d}.enec"
-            is_float = (leaf.dtype in (np.float32, np.float16)
-                        or str(leaf.dtype) == "bfloat16")
-            if self.compress and is_float:
-                ct = enec_api.compress_array(jax.numpy.asarray(leaf))
-                blob = enec_wire.to_wire(ct)
+            if tag == "ct":
+                ct = obj
+                entry = {"name": name, "index": i, "shape": list(ct.shape),
+                         "dtype": ct.dtype_str}
+                blob = enec_wire.to_wire(ct)   # moves compressed bytes only
                 entry["mode"] = ct.mode
                 if ct.params is not None:
                     entry["params"] = list(ct.params.astuple())
+                raw_total += ct.nbytes_raw()
             else:
+                leaf = obj
+                entry = {"name": name, "index": i, "shape": list(leaf.shape),
+                         "dtype": str(leaf.dtype)}
                 blob = b"RAW0" + leaf.tobytes()
                 entry["mode"] = "npraw"
-            raw_total += leaf.nbytes
+                raw_total += leaf.nbytes
             comp_total += len(blob)
             entry["bytes"] = len(blob)
             with open(blob_path, "wb") as f:

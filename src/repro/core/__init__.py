@@ -1,16 +1,25 @@
 """ENEC core: the paper's contribution as a composable JAX module."""
 from .api import (CompressedTensor, abstract_compressed, compress_array,
-                  compress_tree, decompress_array, decompress_tree, tree_ratio)
+                  compress_stacked, compress_stacked_many, compress_tree,
+                  decompress_array, decompress_stacked, decompress_tree,
+                  encode_cache_stats, precompute_wire_bytes,
+                  reset_encode_cache_stats, set_encode_backend, slice_stacked,
+                  tree_ratio)
 from .codec import BlockStreams, decode_blocks, encode_blocks
 from .dtypes import BF16, FORMATS, FP16, FP32, FloatFormat, format_for
 from .params import (DEFAULT_BLOCK_ELEMS, EnecParams, expected_ratio, search,
                      search_for_array)
+from .stats import StackStats, exponent_histogram_device, stack_stats
 
 __all__ = [
     "CompressedTensor", "abstract_compressed", "compress_array",
-    "compress_tree", "decompress_array", "decompress_tree", "tree_ratio",
+    "compress_stacked", "compress_stacked_many", "compress_tree",
+    "decompress_array", "decompress_stacked", "decompress_tree",
+    "encode_cache_stats", "precompute_wire_bytes", "reset_encode_cache_stats",
+    "set_encode_backend", "slice_stacked", "tree_ratio",
     "BlockStreams", "decode_blocks", "encode_blocks",
     "BF16", "FORMATS", "FP16", "FP32", "FloatFormat", "format_for",
     "DEFAULT_BLOCK_ELEMS", "EnecParams", "expected_ratio", "search",
     "search_for_array",
+    "StackStats", "exponent_histogram_device", "stack_stats",
 ]

@@ -1,20 +1,29 @@
-"""Public ENEC API: compress/decompress arrays and pytrees.
+"""Public ENEC API: compress/decompress arrays, layer stacks, and pytrees.
 
 ``CompressedTensor`` is a registered pytree, so compressed weights flow
 through ``jax.jit`` / ``pjit`` / shardings like any other parameters — this
 is what makes weight-streaming serving and compressed checkpointing
 first-class citizens of the framework rather than host-side tools.
+
+The encode pipeline is device-resident (docs/PIPELINE.md): per-tensor
+statistics are a single jit'd reduction whose 256-bin histogram is the only
+thing that crosses to the host, the host-side O(256^2) parameter search runs
+on that histogram, and the encode itself is one jit dispatch per
+(format, params, block-count bucket) — a whole ``(L, ...)`` layer stack is
+encoded as one ``(L*B, N)`` block array via :func:`compress_stacked`.
+``compress_array`` never calls ``jax.device_get`` on the full tensor.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import functools
+from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import codec, params as params_mod
+from . import codec, params as params_mod, stats as stats_mod
 from .codec import BlockStreams
 from .dtypes import FORMATS, FloatFormat, format_for
 from .params import DEFAULT_BLOCK_ELEMS, EnecParams
@@ -32,6 +41,11 @@ class CompressedTensor:
     incompressible / non-float tensors — ratio floor of ~1.0).
     Leading ``shards`` dimension on every stream makes per-device placement
     trivial: shard axis 0 over the TP axis and each device owns its blocks.
+
+    A stacked tensor (from :func:`compress_stacked`) carries one extra
+    leading ``(L,)`` dimension on every stream while the static metadata
+    still describes a single layer — ``lax.scan`` slices the leading dim
+    away and each slice is a valid per-layer ``CompressedTensor``.
     """
     streams: Optional[BlockStreams]
     raw_bytes: Optional[jax.Array]
@@ -59,16 +73,32 @@ class CompressedTensor:
         return sum(l.size * l.dtype.itemsize for l in leaves)
 
     def nbytes_wire(self) -> int:
-        """Exact compressed size (paper's file-based accounting)."""
+        """Exact compressed size (paper's file-based accounting).
+
+        The first call on an "enec" tensor transfers the (tiny) per-block
+        ``high_len`` vector and caches the result; use
+        :func:`precompute_wire_bytes` to batch that transfer over a whole
+        tree instead of syncing once per tensor.
+        """
         if self.mode == "const":
             return jnp.dtype(self.dtype_str).itemsize + HEADER_BYTES
         if self.mode == "raw":
             return int(np.prod(self.shape)) * jnp.dtype(self.dtype_str).itemsize + HEADER_BYTES
+        cached = getattr(self, "_wire_bytes", None)
+        if cached is not None:
+            return cached
+        high_bits = int(np.asarray(
+            jax.device_get(self.streams.high_len), np.int64).sum())
+        return self._set_wire_bytes(high_bits)
+
+    def _set_wire_bytes(self, total_high_bits: int) -> int:
+        """Fill the wire-size cache from an already-transferred high_len sum."""
         s = self.streams
         fixed = (s.mask.size + s.low.size + s.raw.size)
-        true_high = int(np.ceil(np.asarray(jax.device_get(s.high_len), np.int64).sum() / 8))
         nblocks = int(np.prod(s.mask.shape[:-1]))  # per-block high length: 4B each
-        return fixed + true_high + 4 * nblocks + HEADER_BYTES
+        true_high = int(np.ceil(total_high_bits / 8))
+        self._wire_bytes = fixed + true_high + 4 * nblocks + HEADER_BYTES
+        return self._wire_bytes
 
     def nbytes_raw(self) -> int:
         return int(np.prod(self.shape)) * jnp.dtype(self.dtype_str).itemsize
@@ -81,53 +111,164 @@ def _is_supported_float(x) -> bool:
     return jnp.asarray(x).dtype in (jnp.bfloat16, jnp.float16, jnp.float32)
 
 
-import functools
+# ---------------------------------------------------------------------------
+# encoder compile cache (fmt, params, block_elems, block-count bucket)
+# ---------------------------------------------------------------------------
+
+_ENCODE_BACKENDS = ("reference", "pallas")
+_encode_backend = "reference"
+_encode_cache: dict = {}
+_encode_stats = {"compiles": 0, "cache_hits": 0, "dispatches": 0,
+                 "padded_blocks": 0}
 
 
-@functools.lru_cache(maxsize=512)
-def _jit_encode(fmt_name: str, p: EnecParams):
-    fmt = FORMATS[fmt_name]
-    return jax.jit(lambda bits: codec.encode_blocks(bits, fmt, p))
+def set_encode_backend(name: str) -> None:
+    """Select the encoder the pipeline dispatches: the pure-jnp reference
+    codec (default, any backend) or the Pallas kernel (TPU hot path,
+    ``interpret=True`` elsewhere)."""
+    global _encode_backend
+    if name not in _ENCODE_BACKENDS:
+        raise ValueError(f"unknown encode backend {name!r}; "
+                         f"expected one of {_ENCODE_BACKENDS}")
+    if name != _encode_backend:
+        _encode_backend = name
+        _encode_cache.clear()
 
+
+def encode_cache_stats() -> dict:
+    """Counters for the jit'd-encoder cache (benchmarks + dispatch tests).
+
+    ``compiles`` counts distinct (backend, fmt, params, block_elems, bucket)
+    encoder instantiations (each traces/compiles once), ``dispatches`` counts
+    encode calls, ``padded_blocks`` the zero blocks added by power-of-two
+    bucketing.
+    """
+    return dict(_encode_stats, cached_encoders=len(_encode_cache),
+                backend=_encode_backend)
+
+
+def reset_encode_cache_stats(clear_cache: bool = False) -> None:
+    for k in _encode_stats:
+        _encode_stats[k] = 0
+    if clear_cache:
+        _encode_cache.clear()
+
+
+_BUCKET_POW2_MAX = 64
+
+
+def _block_bucket(nblocks: int) -> int:
+    """Round the block count up so a 48-layer model hits a handful of
+    compiled encoders instead of one per distinct tensor shape: powers of
+    two up to 64 blocks, multiples of 64 above (pure pow2 would pad up to 2x
+    the encode work for large stacks; 64-multiples keep the pad waste small
+    while still bounding the number of distinct compiles)."""
+    if nblocks <= 1:
+        return 1
+    if nblocks <= _BUCKET_POW2_MAX:
+        return 1 << (nblocks - 1).bit_length()
+    return -(-nblocks // _BUCKET_POW2_MAX) * _BUCKET_POW2_MAX
+
+
+def _encoder_key(fmt_name: str, p: EnecParams, block_elems: int) -> tuple:
+    """Compile-cache key sans block count.  The reference encoder keeps the
+    linear-map parameter ``b`` as a traced per-block operand (it never enters
+    a shape), so one compiled program serves every ``b`` — the key carries
+    only (n, m, L).  The Pallas kernel bakes the whole param tuple in."""
+    if _encode_backend == "pallas":
+        return (_encode_backend, fmt_name, p.astuple(), block_elems)
+    return (_encode_backend, fmt_name, (p.n, p.m, p.L), block_elems)
+
+
+def _encoder_for(fmt_name: str, p: EnecParams, block_elems: int, bucket: int):
+    key = _encoder_key(fmt_name, p, block_elems) + (bucket,)
+    fn = _encode_cache.get(key)
+    if fn is None:
+        if len(_encode_cache) >= 512:   # safety valve; never hit in practice
+            _encode_cache.clear()
+        _encode_stats["compiles"] += 1
+        fmt = FORMATS[fmt_name]
+        # encode reads (n, m, L) for shapes and b for arithmetic only;
+        # normalizing the bookkeeping fields lets params that differ in
+        # (l, expected_bits) — and, on the reference backend, b — share
+        # one compile
+        p_norm = EnecParams(b=p.b, n=p.n, m=p.m, L=p.L, l=0)
+        if _encode_backend == "pallas":
+            from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
+            fn = kernel_ops.pipeline_encoder(fmt, p_norm)
+        else:
+            fn = jax.jit(functools.partial(codec.encode_blocks,
+                                           fmt=fmt, p=p_norm))
+        _encode_cache[key] = fn
+    else:
+        _encode_stats["cache_hits"] += 1
+    return fn
+
+
+def _encode_bucketed(bits, fmt: FloatFormat, p: EnecParams, block_elems: int,
+                     b_vec=None) -> BlockStreams:
+    """One encode dispatch for a (B, N) block array, compile-cached on the
+    bucketed block count (pad with zero blocks, slice the result).
+
+    ``b_vec`` optionally carries a per-block linear-map parameter so blocks
+    from stacks with different searched ``b`` share the dispatch.
+    """
+    nblocks = bits.shape[0]
+    bucket = _block_bucket(nblocks)
+    if _encode_backend != "pallas" and b_vec is None:
+        b_vec = jnp.full((nblocks,), p.b, jnp.int32)
+    if bucket != nblocks:
+        _encode_stats["padded_blocks"] += bucket - nblocks
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((bucket - nblocks, bits.shape[1]), bits.dtype)])
+        if b_vec is not None:
+            b_vec = jnp.concatenate(
+                [b_vec, jnp.full((bucket - nblocks,), p.b, jnp.int32)])
+    fn = _encoder_for(fmt.name, p, block_elems, bucket)
+    _encode_stats["dispatches"] += 1
+    streams = fn(bits) if b_vec is None else fn(bits, b_vec=b_vec)
+    if bucket != nblocks:
+        streams = jax.tree.map(lambda a: a[:nblocks], streams)
+    return streams
+
+
+# ---------------------------------------------------------------------------
+# single-array API
+# ---------------------------------------------------------------------------
 
 def compress_array(x, p: Optional[EnecParams] = None,
                    block_elems: int = DEFAULT_BLOCK_ELEMS,
                    shards: int = 1) -> CompressedTensor:
-    """Compress one array. ``p=None`` searches parameters on the host."""
+    """Compress one array. ``p=None`` searches parameters on the host.
+
+    Device-resident: statistics (exponent histogram + const check) are one
+    jit'd reduction, only the histogram crosses to the host, and the full
+    tensor is never transferred.
+    """
     x = jnp.asarray(x)
-    if not _is_supported_float(x):
+    if not _is_supported_float(x) or x.size == 0:
         return _raw_tensor(x, shards)
     fmt = format_for(x.dtype)
-    host = np.asarray(jax.device_get(x))
+    flat_bits = jnp.ravel(x).view(fmt.uint_dtype)
+    st = stats_mod.stack_stats(flat_bits[None, :], fmt)
     # constant-tensor escape (RZE-style, LC framework §II-C): fresh optimizer
     # moments / padding tensors are all one value — store it once.
-    flat_host = np.ascontiguousarray(host).view(fmt.np_uint_dtype).reshape(-1)
-    if flat_host.size and (flat_host == flat_host[0]).all():
+    if bool(st.is_const[0]):
         return CompressedTensor(
             streams=None,
-            raw_bytes=jnp.asarray(flat_host[:1]).view(jnp.uint8),
+            raw_bytes=jnp.asarray(st.first[:1]).view(jnp.uint8),
             fmt_name=fmt.name, params=None, shape=tuple(x.shape),
             dtype_str=str(x.dtype), block_elems=block_elems, shards=shards,
             mode="const")
     if p is None:
-        p = params_mod.search_for_array(host, fmt, block_elems=block_elems)
-    else:
-        # transferred params: widen if this tensor's range escapes (lossless
-        # guarantee, DESIGN.md §2.iii)
-        bits = np.ascontiguousarray(host).view(fmt.np_uint_dtype)
-        exp = (bits >> fmt.mant_bits) & fmt.exp_mask
-        if exp.size:
-            p = params_mod.widen_for_range(p, int(exp.min()), int(exp.max()))
-    bits = codec.to_blocks(x, fmt, block_elems)
-    nblocks = bits.shape[0]
-    if shards > 1:
-        if nblocks % shards:
-            extra = (-nblocks) % shards
-            bits = jnp.concatenate(
-                [bits, jnp.zeros((extra, block_elems), bits.dtype)])
-            nblocks += extra
-        bits = bits.reshape(shards * (nblocks // shards), block_elems)
-    streams = _jit_encode(fmt.name, p)(bits)
+        p = params_mod.search(st.hist, fmt, block_elems=block_elems)
+    # widen to the EXACT exponent bounds: a no-op for freshly searched params
+    # on an exact histogram, the lossless escape for transferred params, and
+    # the correctness guarantee when the histogram was sampled
+    p = params_mod.widen_for_range(p, *st.bounds())
+    bits, _ = codec.bits_to_blocks(flat_bits, block_elems, shards,
+                                   pad_value=p.b << fmt.mant_bits)
+    streams = _encode_bucketed(bits, fmt, p, block_elems)
     if shards > 1:
         streams = jax.tree.map(
             lambda a: a.reshape((shards, a.shape[0] // shards) + a.shape[1:]),
@@ -167,6 +308,137 @@ def decompress_array(ct: CompressedTensor):
 
 
 # ---------------------------------------------------------------------------
+# stacked (layer-stack) API — one dispatch per stack
+# ---------------------------------------------------------------------------
+
+def compress_stacked_many(stacks: Sequence[Any],
+                          p: Optional[EnecParams] = None,
+                          block_elems: int = DEFAULT_BLOCK_ELEMS,
+                          shards: int = 1) -> List[Optional[CompressedTensor]]:
+    """Compress many ``(L, ...)`` layer stacks with O(#buckets) dispatches.
+
+    Pipeline (docs/PIPELINE.md): one stats dispatch per stack, ONE host
+    transfer for all statistics, host-side parameter search per stack, then
+    stacks sharing an encoder bucket (fmt, params, block_elems) are
+    concatenated and encoded in a single dispatch.  Wire-size accounting for
+    the never-worse escape is one more batched transfer of the per-block
+    ``high_len`` vectors.
+
+    Returns one entry per input stack: a ``CompressedTensor`` whose stream
+    arrays carry a leading ``(L, ...)`` layout (metadata describes a single
+    layer, matching what per-layer :func:`compress_array` + ``jnp.stack``
+    used to produce), or ``None`` when the stack must stay dense
+    (unsupported dtype, a constant layer, or incompressible data).
+    """
+    results: List[Optional[CompressedTensor]] = [None] * len(stacks)
+    prepared = []   # (slot, fmt, bits2d, layer_shape, device_stats)
+    for slot, x in enumerate(stacks):
+        x = jnp.asarray(x)
+        if x.ndim < 1 or not _is_supported_float(x) or x.size == 0:
+            continue
+        fmt = format_for(x.dtype)
+        bits2d = x.reshape(x.shape[0], -1).view(fmt.uint_dtype)
+        prepared.append((slot, fmt, bits2d, x.shape[1:], str(x.dtype),
+                         stats_mod.stack_stats_device(bits2d, fmt)))
+    host_stats = stats_mod.fetch_stats([pr[-1] for pr in prepared])
+
+    # host search + block layout, grouped by encoder key
+    groups: dict = {}   # key -> list of plan dicts
+    for (slot, fmt, bits2d, layer_shape, dtype_str, _), st in zip(
+            prepared, host_stats):
+        if st.is_const.any():
+            continue    # parity with the per-layer const escape: stay dense
+        pi = (params_mod.search(st.hist, fmt, block_elems=block_elems)
+              if p is None else p)
+        # one widen to the stack's exact bounds: covers transferred params
+        # and sampled histograms, and — unlike the retired per-layer loop —
+        # cannot end up with layers encoded under different params than the
+        # stack metadata advertises
+        pi = params_mod.widen_for_range(pi, *st.bounds())
+        blocks, per_layer_blocks = codec.stacked_blocks(
+            bits2d, block_elems, shards, pad_value=pi.b << fmt.mant_bits)
+        key = _encoder_key(fmt.name, pi, block_elems)
+        groups.setdefault(key, []).append(dict(
+            slot=slot, fmt=fmt, p=pi, blocks=blocks,
+            n_layers=bits2d.shape[0], layer_shape=layer_shape,
+            dtype_str=dtype_str, per_layer_blocks=per_layer_blocks))
+
+    for members in groups.values():
+        if len(members) == 1:
+            all_blocks = members[0]["blocks"]
+        else:
+            all_blocks = jnp.concatenate([m["blocks"] for m in members])
+        b_vec = None
+        if _encode_backend != "pallas":
+            b_vec = jnp.concatenate(
+                [jnp.full((m["blocks"].shape[0],), m["p"].b, jnp.int32)
+                 for m in members])
+        streams = _encode_bucketed(all_blocks, members[0]["fmt"],
+                                   members[0]["p"], block_elems, b_vec=b_vec)
+        offset = 0
+        for m in members:
+            nb = m["blocks"].shape[0]
+            s = jax.tree.map(lambda a: a[offset:offset + nb], streams)
+            offset += nb
+            n_layers, plb = m["n_layers"], m["per_layer_blocks"]
+            lead = ((n_layers, shards, plb // shards) if shards > 1
+                    else (n_layers, plb))
+            s = jax.tree.map(lambda a: a.reshape(lead + a.shape[1:]), s)
+            results[m["slot"]] = CompressedTensor(
+                streams=s, raw_bytes=None, fmt_name=m["fmt"].name,
+                params=m["p"], shape=tuple(m["layer_shape"]),
+                dtype_str=m["dtype_str"], block_elems=block_elems,
+                shards=shards, mode="enec")
+
+    # never-worse escape, one batched transfer for every stack's high_len
+    pending = [(slot, ct) for slot, ct in enumerate(results) if ct is not None]
+    if pending:
+        high_lens = jax.device_get([ct.streams.high_len for _, ct in pending])
+        for (slot, ct), hl in zip(pending, high_lens):
+            n_layers = ct.streams.mask.shape[0]
+            wire = ct._set_wire_bytes(int(np.asarray(hl, np.int64).sum()))
+            if wire >= n_layers * ct.nbytes_raw():
+                results[slot] = None
+    return results
+
+
+def compress_stacked(x, p: Optional[EnecParams] = None,
+                     block_elems: int = DEFAULT_BLOCK_ELEMS,
+                     shards: int = 1) -> Optional[CompressedTensor]:
+    """Compress one ``(L, ...)`` layer stack in a single encode dispatch.
+
+    Bit-identical to compressing each layer with :func:`compress_array`
+    under the same params and stacking the streams, without the L dispatches
+    or the stream-pytree copy.  Returns ``None`` when the stack must stay
+    dense (see :func:`compress_stacked_many`).
+    """
+    return compress_stacked_many([x], p, block_elems, shards)[0]
+
+
+def decompress_stacked(ct: CompressedTensor):
+    """Inverse of :func:`compress_stacked`: one decode dispatch -> (L, ...)."""
+    s = ct.streams
+    n_layers = s.mask.shape[0]
+    flat = BlockStreams(
+        mask=s.mask.reshape(-1, s.mask.shape[-1]),
+        low=s.low.reshape(-1, s.low.shape[-1]),
+        high=s.high.reshape(-1, s.high.shape[-1]),
+        high_len=s.high_len.reshape(-1),
+        raw=s.raw.reshape(-1, s.raw.shape[-1]))
+    bits = codec.decode_blocks(flat, ct.block_elems, ct.fmt, ct.params)
+    per = int(np.prod(ct.shape))
+    flat_layers = bits.reshape(n_layers, -1)[:, :per]
+    return flat_layers.view(ct.fmt.float_dtype).reshape(
+        (n_layers,) + ct.shape).astype(jnp.dtype(ct.dtype_str))
+
+
+def slice_stacked(ct: CompressedTensor, index: int) -> CompressedTensor:
+    """Layer ``index`` of a stacked tensor as a standalone CompressedTensor."""
+    return dataclasses.replace(
+        ct, streams=jax.tree.map(lambda a: a[index], ct.streams))
+
+
+# ---------------------------------------------------------------------------
 # pytree-level API
 # ---------------------------------------------------------------------------
 
@@ -184,11 +456,28 @@ def decompress_tree(ctree):
         is_leaf=lambda x: isinstance(x, CompressedTensor))
 
 
+def precompute_wire_bytes(cts: Sequence[CompressedTensor]) -> None:
+    """Fill the ``nbytes_wire`` cache for many tensors with ONE transfer.
+
+    Without this every ``nbytes_wire()`` call forces its own blocking
+    ``device_get`` of that tensor's ``high_len`` vector.
+    """
+    pending = [c for c in cts if c.mode == "enec"
+               and getattr(c, "_wire_bytes", None) is None]
+    if not pending:
+        return
+    high_lens = jax.device_get([c.streams.high_len for c in pending])
+    for c, hl in zip(pending, high_lens):
+        c._set_wire_bytes(int(np.asarray(hl, np.int64).sum()))
+
+
 def tree_ratio(ctree) -> dict:
-    """Aggregate compression accounting over a compressed pytree."""
+    """Aggregate compression accounting over a compressed pytree (at most
+    one host transfer for the whole tree)."""
     cts = [c for c in jax.tree.leaves(
         ctree, is_leaf=lambda x: isinstance(x, CompressedTensor))
         if isinstance(c, CompressedTensor)]
+    precompute_wire_bytes(cts)
     raw = sum(c.nbytes_raw() for c in cts)
     wire = sum(c.nbytes_wire() for c in cts)
     return {

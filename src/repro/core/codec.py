@@ -48,14 +48,22 @@ def stream_shapes(n_elems: int, fmt: FloatFormat, p: EnecParams):
     }
 
 
-def encode_blocks(bits, fmt: FloatFormat, p: EnecParams) -> BlockStreams:
-    """bits: (B, N) unsigned int view of the floats. Shapes static in (N, p)."""
+def encode_blocks(bits, fmt: FloatFormat, p: EnecParams,
+                  b_vec=None) -> BlockStreams:
+    """bits: (B, N) unsigned int view of the floats.
+
+    Shapes are static in (N, p.n, p.m, p.L); the linear-map parameter enters
+    only the arithmetic, so ``b_vec`` (a traced (B,) per-block vector) can
+    override the static ``p.b`` — the batched pipeline uses this to encode
+    stacks with different searched ``b`` in one compiled dispatch.
+    """
     nblocks, n = bits.shape
     g = n // p.L
     assert n % p.L == 0 and g % 8 == 0, (n, p.L)
 
     exp, raw = split_fields(bits, fmt)
-    y = transform.forward(exp.astype(jnp.uint16), p.b, p.n)  # (B, N), < 2**n
+    b_sel = p.b if b_vec is None else b_vec
+    y = transform.forward(exp.astype(jnp.uint16), b_sel, p.n)  # (B, N), < 2**n
 
     yg = y.reshape(nblocks, g, p.L)
     # §V-B: bitwise-OR replaces reduction-max — group is anomalous iff any
@@ -129,6 +137,38 @@ def to_blocks(x, fmt: FloatFormat, block_elems: int = DEFAULT_BLOCK_ELEMS):
         flat = jnp.concatenate([flat, jnp.zeros(pad, flat.dtype)])
     bits = flat.view(fmt.uint_dtype)
     return bits.reshape(-1, block_elems)
+
+
+def bits_to_blocks(flat_bits, block_elems: int = DEFAULT_BLOCK_ELEMS,
+                   shards: int = 1, pad_value: int = 0):
+    """(size,) uint bit view -> ((B, N) blocks, B) — the L=1 case of
+    :func:`stacked_blocks` (single definition keeps the per-layer and
+    stacked padding rules bit-identical by construction)."""
+    return stacked_blocks(flat_bits[None, :], block_elems, shards, pad_value)
+
+
+def stacked_blocks(bits2d, block_elems: int = DEFAULT_BLOCK_ELEMS,
+                   shards: int = 1, pad_value: int = 0):
+    """(L, per) uint bit view of a layer stack -> ((L*Bs, N) blocks, Bs).
+
+    Row ``l*Bs + b`` equals block ``b`` of layer ``l``, each layer padded to
+    the block size and (when ``shards > 1``) to a block count divisible by
+    ``shards``, so a single encode of the stacked array is bit-identical to
+    L per-layer encodes.  ``pad_value`` should be the bit pattern of the
+    modal exponent (the encoder passes ``b << mant_bits``): padding with
+    zeros would make every padded group anomalous (exponent 0 is far from
+    ``b``) and charge full high-stream bits for data that decode slices
+    away.  Device-only: the input is never copied to the host.
+    """
+    n_layers, per = bits2d.shape
+    nblocks = (per + block_elems - 1) // block_elems
+    if shards > 1:
+        nblocks += (-nblocks) % shards
+    total_pad = nblocks * block_elems - per
+    if total_pad:
+        bits2d = jnp.pad(bits2d, ((0, 0), (0, total_pad)),
+                         constant_values=pad_value)
+    return bits2d.reshape(n_layers * nblocks, block_elems), nblocks
 
 
 def from_blocks(bits, shape, fmt: FloatFormat):

@@ -140,16 +140,28 @@ def search_for_array(x: np.ndarray, fmt: FloatFormat, **kw) -> EnecParams:
 
 
 def widen_for_range(params: EnecParams, l: int, h: int) -> EnecParams:
-    """Raw-escape mechanism (DESIGN.md §2.iii): when transferred parameters
-    do not cover this tensor's exponent range, widen (n, l) minimally while
-    keeping (b, m, L) — losslessness is unconditional."""
-    l2, h2 = min(params.l, l), max(h, params.b)
-    b = min(max(params.b, l2), h2)
-    n = base_width_for(b, l2, h2)
-    if n <= params.n and l2 >= params.l:
-        return params
-    return dataclasses.replace(params, n=max(n, params.n), l=l2,
-                               m=min(params.m, max(n, params.n)))
+    """Widening escape for transferred params (DESIGN.md §2.iii).
+
+    Decode recovers ``x = params.l + ((b - y - params.l) mod 2**n)``, so the
+    round trip is exact iff every exponent lies in the window
+    ``[params.l, params.l + 2**n)``.  When this tensor's observed range
+    ``[l, h]`` escapes that window — below, above, or on BOTH ends — lower
+    ``l`` and/or grow ``n`` by the minimum that restores coverage, keeping
+    (b, m, L) untouched; losslessness is unconditional.  ``m <= n`` is
+    preserved because ``n`` only ever grows.
+
+    (Historical note: this used to route through :func:`base_width_for`,
+    whose Eq. 1 search-time formula carries a +1 wrap-sign margin — it
+    widened tensors whose range the decode window already covered, and
+    overshot ``n`` when it did widen.)
+    """
+    if l >= params.l and (h - params.l) < (1 << params.n):
+        return params                      # window already covers [l, h]
+    l2 = min(params.l, l)
+    n = params.n
+    while (h - l2) >= (1 << n):
+        n += 1
+    return dataclasses.replace(params, n=n, l=l2)
 
 
 def expected_ratio(params: EnecParams, fmt: FloatFormat) -> float:

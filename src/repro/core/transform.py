@@ -15,11 +15,19 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def forward(x, b: int, n: int):
-    """``y = (b - x) mod 2**n`` on unsigned integer lanes."""
+def forward(x, b, n: int):
+    """``y = (b - x) mod 2**n`` on unsigned integer lanes.
+
+    ``b`` may be a static int or a traced array (broadcast against leading
+    axes of ``x``): the linear-map parameter only enters the arithmetic,
+    never a shape, so the batched encoder keeps it dynamic and one compiled
+    program serves every ``b`` — including a per-block vector.
+    """
     x = jnp.asarray(x)
     mod_mask = jnp.asarray((1 << n) - 1, x.dtype)
-    bb = jnp.asarray(b & ((1 << n) - 1), x.dtype)
+    bb = jnp.asarray(b, x.dtype) & mod_mask
+    if bb.ndim:
+        bb = bb.reshape(bb.shape + (1,) * (x.ndim - bb.ndim))
     # (b - x) mod 2**n  ==  (b + (2**n - x mod 2**n)) mod 2**n, branch free.
     return (bb - x) & mod_mask
 

@@ -45,6 +45,17 @@ def encode_blocks(bits, fmt: FloatFormat, p: EnecParams,
     return encode_blocks_pallas(bits, fmt, p, interpret=_interpret())
 
 
+def pipeline_encoder(fmt: FloatFormat, p: EnecParams, use_pallas: bool = True):
+    """Encoder callable for the batched compression pipeline (core.api).
+
+    ``core.api`` jit-caches the result per (fmt, params, block-count bucket),
+    so the Pallas kernel drives the stacked single-dispatch encode path the
+    same way the reference codec does.
+    """
+    return jax.jit(functools.partial(encode_blocks, fmt=fmt, p=p,
+                                     use_pallas=use_pallas))
+
+
 def decode_blocks(streams: codec.BlockStreams, n_elems: int,
                   fmt: FloatFormat, p: EnecParams,
                   use_pallas: bool = True):

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import (CompressedTensor, abstract_compressed,
-                            compress_array, decompress_array)
+                            compress_stacked_many, decompress_array)
 from repro.core.params import EnecParams
 from repro.runtime import sharding as sh
 
@@ -65,46 +65,41 @@ def compress_params_for_streaming(params, *, shared_params: Optional[EnecParams]
                                   shards: int = STREAM_SHARDS):
     """params tree -> same-structure tree with big stacked leaves replaced by
     StreamedWeight.  Leaves under ``period``/stacks keep their leading layer
-    dim in the stream arrays so ``lax.scan`` slices them layer by layer."""
+    dim in the stream arrays so ``lax.scan`` slices them layer by layer.
+
+    Device-resident batched pipeline (docs/PIPELINE.md): every eligible
+    ``(L, ...)`` stack is handed to ``compress_stacked_many``, which computes
+    statistics on device (one tiny host transfer for the whole tree), runs
+    the histogram search per stack (a layer stack is one logical tensor, so
+    every layer shares static codec metadata), and encodes each stack in ONE
+    jit dispatch — no per-layer ``compress_array`` loop, no full-tensor
+    ``device_get``, no ``jnp.stack`` of stream pytrees.
+    """
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    out = []
-    for path, leaf in flat:
+    out = [None] * len(flat)
+    eligible = []   # (slot, leaf, perm, tp_axis, layer_shape)
+    for slot, (path, leaf) in enumerate(flat):
         pstr = "/".join(str(getattr(k, "key", getattr(k, "name",
                         getattr(k, "idx", k)))) for k in path)
         stacked = "period" in pstr or "stack" in pstr
         nbytes = leaf.size * leaf.dtype.itemsize
         if (not stacked or nbytes < min_bytes or leaf.ndim < 3
                 or leaf.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32)):
-            out.append(leaf)
+            out[slot] = leaf
             continue
         layer_shape = leaf.shape[1:]
         tp_axis = _tp_axis_for(pstr, layer_shape)
-        n_layers = leaf.shape[0]
         perm = jnp.moveaxis(leaf, 1 + tp_axis, 1)       # (L, tp_dim, ...)
-        # one param search over the whole stack (a layer stack is one
-        # logical tensor) so every layer shares static codec metadata
-        p = shared_params
-        if p is None:
-            from repro.core.dtypes import format_for
-            from repro.core import params as params_mod
-            p = params_mod.search_for_array(
-                np.asarray(jax.device_get(perm)), format_for(leaf.dtype))
-        cts = [compress_array(perm[i], p, shards=shards)
-               for i in range(n_layers)]
-        if any(c.mode != "enec" for c in cts):
-            out.append(leaf)                            # incompressible
+        eligible.append((slot, leaf, perm, tp_axis, layer_shape))
+    cts = compress_stacked_many([e[2] for e in eligible],
+                                p=shared_params, shards=shards)
+    for (slot, leaf, _, tp_axis, layer_shape), ct in zip(eligible, cts):
+        if ct is None:
+            out[slot] = leaf                            # incompressible/const
             continue
-        stacked_ct = jax.tree.map(lambda *xs: jnp.stack(xs), *cts)
-        # keep single-layer metadata (scan slices the leading L dim away)
-        meta = cts[0]
-        ct = CompressedTensor(
-            streams=stacked_ct.streams, raw_bytes=None,
-            fmt_name=meta.fmt_name, params=meta.params, shape=meta.shape,
-            dtype_str=meta.dtype_str, block_elems=meta.block_elems,
-            shards=meta.shards, mode="enec")
-        out.append(StreamedWeight(ct=ct, tp_axis=tp_axis,
-                                  layer_shape=tuple(layer_shape),
-                                  dtype_str=str(leaf.dtype)))
+        out[slot] = StreamedWeight(ct=ct, tp_axis=tp_axis,
+                                   layer_shape=tuple(layer_shape),
+                                   dtype_str=str(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -70,6 +70,49 @@ def test_crash_mid_save_leaves_previous_intact(tmp_path):
     _assert_trees_equal(tree, out)
 
 
+def test_save_batches_encode_dispatches(tmp_path):
+    """Float leaves ride the batched pipeline: leaves whose searched
+    (n, m, L) coincide share one encode dispatch (per-leaf searched params —
+    NOT shared — so unrelated same-shape tensors keep their own ratio);
+    restore must stay bit-exact per leaf."""
+    import repro.core.api as enec_api
+
+    w = make_realistic_bf16(64_000, seed=11).reshape(160, 400)
+    # Adam-nu-like second moment: same shape, squared values, so its exponent
+    # distribution sits far below the weights' — per-leaf search MUST give it
+    # different params (sharing them costs ~6% ratio)
+    nu = (jnp.asarray(w, jnp.float32) ** 2).astype(jnp.bfloat16)
+    tree = {"blk0": {"w": w},
+            "blk1": {"w": make_realistic_bf16(64_000, seed=12).reshape(160, 400)},
+            "blk2": {"w": make_realistic_bf16(64_000, seed=13).reshape(160, 400)},
+            "nu": nu}
+    mgr = CheckpointManager(tmp_path)
+    enec_api.reset_encode_cache_stats()
+    mgr.save(3, tree, blocking=True)
+    st = enec_api.encode_cache_stats()
+    # far fewer dispatches than leaves is the point; typically 1-2 buckets
+    assert st["dispatches"] <= 2, st
+    out, manifest = mgr.load(tree)
+    _assert_trees_equal(tree, out)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    assert all(by_name[n]["mode"] == "enec"
+               for n in ("blk0/w", "blk1/w", "blk2/w", "nu"))
+    assert tuple(by_name["nu"]["params"]) != tuple(by_name["blk0/w"]["params"])
+
+
+def test_const_leaf_in_group_still_safe(tmp_path):
+    """A constant leaf inside a same-shape group must fall back to the
+    per-leaf path (const escape) without corrupting its siblings."""
+    tree = {"a": make_realistic_bf16(40_000, seed=15),
+            "b": jnp.zeros((40_000,), jnp.bfloat16)}
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(4, tree, blocking=True)
+    out, manifest = mgr.load(tree)
+    _assert_trees_equal(tree, out)
+    modes = {e["name"]: e["mode"] for e in manifest["leaves"]}
+    assert modes["b"] == "const"
+
+
 def test_manifest_reports_compression(tmp_path):
     mgr = CheckpointManager(tmp_path)
     mgr.save(9, _tree(2), blocking=True)

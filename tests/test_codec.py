@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (BF16, FP16, FP32, compress_array, compress_tree,
                         decompress_array, decompress_tree, search_for_array,

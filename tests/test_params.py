@@ -2,7 +2,7 @@
 joint search, widening escape, and the joint-search improvement."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import BF16, FP16
 from repro.core.params import (base_width_for, expected_ratio, search,
@@ -48,6 +48,48 @@ def test_widen_escape_covers_new_range():
     assert w.l <= 10
     assert (200 - w.l) < (1 << w.n)  # injective over the widened range
     assert (w.b, w.L) == (p.b, p.L)  # structural params preserved
+
+
+def test_widen_escape_both_ends():
+    """Regression: a transferred-params tensor whose range escapes BELOW and
+    ABOVE the donor window must still land in [l, l + 2**n) after widening,
+    with (b, m, L) untouched (the documented contract)."""
+    p = search(_paper_like_hist(), BF16)
+    lo, hi = p.l - 40, p.l + (1 << p.n) + 60   # escapes on both ends
+    w = widen_for_range(p, lo, hi)
+    assert w.l <= lo
+    assert hi < w.l + (1 << w.n)               # decode window covers [lo, hi]
+    assert (w.b, w.m, w.L) == (p.b, p.m, p.L)  # only (n, l) may change
+    assert w.m <= w.n
+
+
+def test_widen_noop_when_covered():
+    p = search(_paper_like_hist(), BF16)
+    assert widen_for_range(p, p.l, p.l + (1 << p.n) - 1) is p
+
+
+def test_transferred_params_double_escape_roundtrip():
+    """End-to-end: donor params from a narrow tensor applied to a tensor with
+    subnormal-range AND huge-exponent values is still bit-exact."""
+    import jax
+    import jax.numpy as jnp
+    from conftest import make_realistic_bf16
+    from repro.core import compress_array, decompress_array, search_for_array
+
+    donor = make_realistic_bf16(200_000, seed=21)
+    p = search_for_array(np.asarray(jax.device_get(donor)), BF16)
+    r = np.random.default_rng(22)
+    w = (r.standard_normal(100_000) * 0.02).astype("float32")
+    w[:100] = 1e38        # exponent far above the donor window
+    w[100:200] = 1e-38    # exponent far below the donor window
+    x = jnp.asarray(w).astype(jnp.bfloat16)
+    ct = compress_array(x, p)
+    y = decompress_array(ct)
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(x)).view(np.uint16),
+        np.asarray(jax.device_get(y)).view(np.uint16))
+    assert ct.mode != "enec" or (
+        ct.params.b == p.b and ct.params.m == p.m and ct.params.L == p.L)
 
 
 def test_fp16_narrow_exponent():

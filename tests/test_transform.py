@@ -1,7 +1,7 @@
 """Branch-free linear transform: exact-inverse property over valid params."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import transform
 from repro.core.params import base_width_for
