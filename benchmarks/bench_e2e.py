@@ -26,8 +26,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
-from repro.runtime.streaming import (compress_params_for_streaming,
-                                     decompress_sliced)
+from repro.runtime.streaming import compress_params_for_streaming
 
 from .common import time_fn
 
@@ -47,18 +46,14 @@ def run():
     for batch in (1, 4):
         pb = {"tokens": jax.random.randint(rng, (batch, 32), 0,
                                            cfg.vocab_size)}
-        prefill_d = jax.jit(lambda p, b: model.prefill_fn(p, b, 64))
-        prefill_s = jax.jit(lambda p, b: model.prefill_fn(
-            p, b, 64, decompressor=decompress_sliced))
-        ttft_d = time_fn(prefill_d, params, pb, iters=3)
-        ttft_s = time_fn(prefill_s, streamed, pb, iters=3)
-        _, cache = prefill_d(params, pb)
+        prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, 64))
+        ttft_d = time_fn(prefill, params, pb, iters=3)
+        ttft_s = time_fn(prefill, streamed, pb, iters=3)
+        _, cache = prefill(params, pb)
         tok = jnp.zeros((batch,), jnp.int32)
-        dec_d = jax.jit(lambda p, c, t: model.decode_fn(p, c, t))
-        dec_s = jax.jit(lambda p, c, t: model.decode_fn(
-            p, c, t, decompressor=decompress_sliced))
-        tpot_d = time_fn(dec_d, params, cache, tok, iters=5)
-        tpot_s = time_fn(dec_s, streamed, cache, tok, iters=5)
+        dec = jax.jit(lambda p, c, t: model.decode_fn(p, c, t))
+        tpot_d = time_fn(dec, params, cache, tok, iters=5)
+        tpot_s = time_fn(dec, streamed, cache, tok, iters=5)
         rows.append((f"fig10/smoke_ttft/bs{batch}", ttft_d * 1e6,
                      f"dense_s={ttft_d:.4f};streamed_s={ttft_s:.4f}"))
         rows.append((f"fig10/smoke_tpot/bs{batch}", tpot_d * 1e6,

@@ -1,0 +1,56 @@
+"""ISSUE 2: TTFT / TPOT / tok/s across the weight-execution modes.
+
+Serves a reduced llama config through the full policy path (dense | stream |
+fused) and times prefill + single-token decode.  On CPU the compressed modes
+pay pure decode overhead (no CPU->NPU link to win back) and the fused kernel
+runs under Pallas interpret — the numbers locate the overhead side of the
+trade; the win side is the derived roofline in bench_e2e.  Logits across the
+three modes are bit-identical (tests/test_serving_modes.py), so the modes
+are directly comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.runtime.streaming import assign_weight_modes, stream_stats
+
+from .common import time_fn
+
+
+def run():
+    rows = []
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True, n_layers=4)
+    model = build_model(cfg)
+    rng = jax.random.key(0)
+    params = model.init(rng)
+    batch, prompt_len, max_len = 2, 16, 24
+    pb = {"tokens": jax.random.randint(jax.random.key(1),
+                                       (batch, prompt_len), 0,
+                                       cfg.vocab_size)}
+    for mode in ("dense", "stream", "fused"):
+        tree = assign_weight_modes(params, mode=mode, min_bytes=1024,
+                                   shards=2)
+        st = stream_stats(tree)
+        prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, max_len))
+
+        @jax.jit
+        def decode_step(p, cache, tok):
+            logits, cache = model.decode_fn(p, cache, tok)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        ttft = time_fn(prefill, tree, pb, iters=3)
+        _, cache = prefill(tree, pb)
+        tok = jnp.zeros((batch,), jnp.int32)
+        tpot = time_fn(lambda p, c, t: decode_step(p, c, t)[0],
+                       tree, cache, tok, iters=5)
+        rows.append((f"serve/{mode}/bs{batch}", tpot * 1e6,
+                     f"ttft_s={ttft:.4f};tpot_s={tpot:.4f};"
+                     f"tok_s={batch / tpot:.1f};"
+                     f"hbm_ratio={st['hbm_ratio']:.3f}"))
+    return rows

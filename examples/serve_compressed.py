@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.runtime.streaming import (compress_params_for_streaming,
-                                     decompress_sliced, stream_stats)
+                                     stream_stats)
 
 
 def main():
@@ -46,10 +46,9 @@ def main():
         rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)
     max_len = args.prompt_len + args.tokens
 
-    prefill = jax.jit(lambda p, b: model.prefill_fn(
-        p, b, max_len, decompressor=decompress_sliced))
-    decode = jax.jit(lambda p, c, t: model.decode_fn(
-        p, c, t, decompressor=decompress_sliced))
+    # StreamedWeight handles resolve inside the model — no hook to pass
+    prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, max_len))
+    decode = jax.jit(lambda p, c, t: model.decode_fn(p, c, t))
 
     t0 = time.perf_counter()
     logits, cache = prefill(streamed, {"tokens": prompts})

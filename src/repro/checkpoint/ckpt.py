@@ -35,7 +35,7 @@ import numpy as np
 from repro.core import api as enec_api
 from repro.core import wire as enec_wire
 
-_ENEC_DTYPES = (jnp.bfloat16, jnp.float16, jnp.float32)
+_ENEC_DTYPES = enec_api.SUPPORTED_FLOAT_DTYPES
 
 
 def _tree_paths(tree):

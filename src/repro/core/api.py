@@ -107,8 +107,15 @@ class CompressedTensor:
         return self.nbytes_raw() / max(self.nbytes_wire(), 1)
 
 
+# the formats the codec understands — single source of truth for every
+# consumer's eligibility check (streaming policy, checkpointing)
+SUPPORTED_FLOAT_DTYPES = tuple(jnp.dtype(d) for d in (jnp.bfloat16,
+                                                      jnp.float16,
+                                                      jnp.float32))
+
+
 def _is_supported_float(x) -> bool:
-    return jnp.asarray(x).dtype in (jnp.bfloat16, jnp.float16, jnp.float32)
+    return jnp.asarray(x).dtype in SUPPORTED_FLOAT_DTYPES
 
 
 # ---------------------------------------------------------------------------
@@ -436,6 +443,77 @@ def slice_stacked(ct: CompressedTensor, index: int) -> CompressedTensor:
     """Layer ``index`` of a stacked tensor as a standalone CompressedTensor."""
     return dataclasses.replace(
         ct, streams=jax.tree.map(lambda a: a[index], ct.streams))
+
+
+# ---------------------------------------------------------------------------
+# tile-wise compression for the fused decompress+matmul kernel
+# ---------------------------------------------------------------------------
+
+MATMUL_TILE = 128
+# One 128x128 MXU weight tile holds 16,384 elements == exactly one ENEC
+# block, so the paper's preferred block size doubles as the matmul tile.
+assert MATMUL_TILE * MATMUL_TILE == DEFAULT_BLOCK_ELEMS
+
+
+def matmul_tiles(w):
+    """(L, K, N) or (K, N) weight -> (L, n_tiles * k_tiles * TILE*TILE) bits.
+
+    Tile ``t = n_tile * k_tiles + k_tile`` of layer ``l`` is stored row-major
+    at block ``(l, t)`` — the layout ``kernels.decompress_matmul`` consumes.
+    Ragged K/N are zero-padded up to the tile size (the kernel zero-pads the
+    activations to match and slices the padded output columns away, so any
+    2-D matmul weight is tileable; the pad must be zeros, not the modal
+    exponent, for the padded contributions to vanish exactly).
+    """
+    t = MATMUL_TILE
+    w = jnp.asarray(w)
+    if w.ndim == 2:
+        w = w[None]
+    n_layers, k, n = w.shape
+    kp, np_ = -(-k // t) * t, -(-n // t) * t
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, 0), (0, kp - k), (0, np_ - n)))
+    tiles = w.reshape(n_layers, kp // t, t, np_ // t, t)
+    return tiles.transpose(0, 3, 1, 2, 4).reshape(n_layers, -1)
+
+
+def untile_matmul_weight(ct: CompressedTensor, k: int, n: int):
+    """Inverse of :func:`matmul_tiles` for ONE layer slice of a tile-wise
+    tensor: decompress, un-permute the tile order, strip the padding."""
+    t = MATMUL_TILE
+    kp, np_ = -(-k // t) * t, -(-n // t) * t
+    flat = decompress_array(ct)
+    tiles = flat.reshape(np_ // t, kp // t, t, t)
+    return tiles.transpose(1, 2, 0, 3).reshape(kp, np_)[:k, :n]
+
+
+def tile_weights_for_fusion_many(ws: Sequence[Any], p: Optional[EnecParams]
+                                 = None) -> List[Optional[CompressedTensor]]:
+    """Compress many (L, K, N) / (K, N) matmul weights tile-wise for the
+    fused kernel, riding :func:`compress_stacked_many`: per-stack searched
+    params, one encode dispatch per (fmt, params, block-bucket) group, and
+    the never-worse escape intact (``None`` entries must stay dense)."""
+    return compress_stacked_many([matmul_tiles(w) for w in ws], p=p,
+                                 block_elems=DEFAULT_BLOCK_ELEMS, shards=1)
+
+
+def tile_weights_for_fusion(w, p: Optional[EnecParams] = None
+                            ) -> CompressedTensor:
+    """Compress one weight tile-wise for the fused kernel.
+
+    2-D input returns a per-layer tensor (streams lead with the tile dim);
+    3-D ``(L, K, N)`` input keeps the extra leading ``(L,)`` so ``lax.scan``
+    can slice the streams per layer.  Raises on the incompressible escape —
+    callers that need the fallback use :func:`tile_weights_for_fusion_many`.
+    """
+    squeeze = jnp.asarray(w).ndim == 2
+    ct = tile_weights_for_fusion_many([w], p)[0]
+    if ct is None:
+        raise ValueError("weight is incompressible or constant — serve dense")
+    if squeeze:
+        ct = dataclasses.replace(
+            ct, streams=jax.tree.map(lambda a: a[0], ct.streams))
+    return ct
 
 
 # ---------------------------------------------------------------------------

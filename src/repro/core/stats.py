@@ -62,7 +62,10 @@ def _stats_fn(fmt_name: str):
         exp = (bits2d >> fmt.mant_bits) & jnp.asarray(fmt.exp_mask,
                                                       bits2d.dtype)
         flat = exp.reshape(-1)
-        stride = max(1, flat.size // HIST_SAMPLE_CAP)   # static at trace time
+        # static at trace time; forced odd so the stride never divides
+        # power-of-two weight dims (an even stride equal to the row length
+        # would sample a few columns instead of the whole tensor)
+        stride = max(1, flat.size // HIST_SAMPLE_CAP) | 1
         sample = flat[::stride].astype(jnp.int32)
         hist = jnp.zeros((1 << fmt.exp_bits,), jnp.int32).at[sample].add(1)
         is_const = jnp.all(bits2d == bits2d[:, :1], axis=1)

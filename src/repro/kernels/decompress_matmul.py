@@ -11,9 +11,16 @@ Tiling: the weight matrix (K, N) is cut into 128x128 tiles; one tile
 (16,384 elements) == exactly one ENEC block, so the paper's preferred block
 size doubles as the MXU-aligned tile.  Grid (N/128, K/128), K innermost;
 each step decodes one block into VMEM and feeds the MXU, accumulating into
-the (M, 128) output tile.
+the (M, 128) output tile.  Ragged K/N ride the zero-padded tile layout of
+``core.api.matmul_tiles``.
 
-Oracle: decompress-then-matmul in pure jnp (ref.py).
+The grid schedule (tile order + f32 accumulation) is the *numeric contract*
+of the serving stack: ``kernels.ref.tiled_matmul_ref`` realizes the same
+schedule in pure jnp, and every weight-execution mode (runtime/weights.py)
+routes its matmuls through one of the two — which is what makes dense /
+stream / fused serve logits bit-identical.
+
+Oracle: decompress-untile-then-tiled-matmul in pure jnp (ref.py), exact.
 """
 from __future__ import annotations
 
@@ -24,30 +31,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import codec
-from repro.core.api import CompressedTensor
-from repro.core.dtypes import FloatFormat, from_bits
-from repro.core.params import EnecParams
+from repro.core.api import (MATMUL_TILE, CompressedTensor,  # noqa: F401
+                            tile_weights_for_fusion,
+                            tile_weights_for_fusion_many,
+                            untile_matmul_weight)
+from repro.core.dtypes import from_bits
 
 from .enec_decode import decode_block_body
 
-TILE = 128
+TILE = MATMUL_TILE
 BLOCK_ELEMS = TILE * TILE  # one ENEC block == one MXU weight tile
-
-
-def tile_weights_for_fusion(w, p: EnecParams) -> CompressedTensor:
-    """Compress a (K, N) weight matrix tile-wise for the fused kernel.
-
-    Block t = (n_tile * K/128 + k_tile) holds that 128x128 tile row-major.
-    """
-    from repro.core.api import compress_array  # local to avoid cycle
-    k, n = w.shape
-    assert k % TILE == 0 and n % TILE == 0, (k, n)
-    tiles = w.reshape(k // TILE, TILE, n // TILE, TILE)
-    # (n_tiles, k_tiles, TILE(k), TILE(n)) then flatten per tile row-major
-    tiles = tiles.transpose(2, 0, 1, 3).reshape(-1)
-    ct = compress_array(tiles, p, block_elems=BLOCK_ELEMS)
-    assert ct.mode == "enec", "fused kernel requires enec mode"
-    return ct
 
 
 def _fused_kernel(mask_ref, low_ref, high_ref, raw_ref, x_ref, o_ref, *,
@@ -72,13 +65,35 @@ def _fused_kernel(mask_ref, low_ref, high_ref, raw_ref, x_ref, o_ref, *,
 
 def decompress_matmul(x, ct: CompressedTensor, k: int, n: int, *,
                       interpret: bool = True):
-    """out = x @ W where W (k, n) is stored only in ENEC-compressed form."""
+    """out = x @ W where W (k, n) is stored only in ENEC tile streams.
+
+    ``x``: (M, K) activations — M is B*T tokens (prefill) or B (decode);
+    the serving layers flatten (B, T, K) to (B*T, K) before calling in.
+    ``ct``: per-layer tile streams (leading dim = tiles).  A stacked
+    ``(L, ...)`` tensor from :func:`tile_weights_for_fusion` must be sliced
+    to one layer first — ``lax.scan`` does exactly that when the streams
+    ride the scanned params, so the kernel works unmodified inside the
+    decode scan.  Ragged k/n are handled by the zero-padded tile layout:
+    x is zero-padded to the tile multiple and the output sliced back.
+    """
     m = x.shape[0]
-    assert x.shape[1] == k and k % TILE == 0 and n % TILE == 0
-    k_tiles, n_tiles = k // TILE, n // TILE
+    assert x.shape[1] == k, (x.shape, k)
+    assert ct.mode == "enec" and ct.shards == 1, \
+        "fused kernel requires unsharded enec tile streams"
+    kp, np_ = -(-k // TILE) * TILE, -(-n // TILE) * TILE
+    k_tiles, n_tiles = kp // TILE, np_ // TILE
+    s = ct.streams
+    assert s.mask.ndim == 2, "stacked streams: slice one layer first"
+    assert s.mask.shape[0] == k_tiles * n_tiles, \
+        (s.mask.shape, k_tiles, n_tiles)
+    if kp != k:
+        x = jnp.pad(x, ((0, 0), (0, kp - k)))
     fmt, p = ct.fmt, ct.params
     widths = codec.stream_shapes(BLOCK_ELEMS, fmt, p)
-    s = ct.streams
+    high, high_w = s.high, widths["high"]
+    if high_w == 0:  # m == n: no high stream; feed a dummy byte
+        high = jnp.zeros((s.mask.shape[0], 1), jnp.uint8)
+        high_w = 1
 
     def wspec(nbytes):
         # weight-stream tile t = n_tile * k_tiles + k_tile
@@ -89,11 +104,12 @@ def decompress_matmul(x, ct: CompressedTensor, k: int, n: int, *,
         grid=(n_tiles, k_tiles),
         in_specs=[
             wspec(widths["mask"]), wspec(widths["low"]),
-            wspec(widths["high"]), wspec(widths["raw"]),
+            wspec(high_w), wspec(widths["raw"]),
             pl.BlockSpec((m, TILE), lambda ni, ki: (0, ki)),
         ],
         out_specs=pl.BlockSpec((m, TILE), lambda ni, ki: (0, ni)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m, np_), jnp.float32),
         interpret=interpret,
     )
-    return fn(s.mask, s.low, s.high, s.raw, x)
+    out = fn(s.mask, s.low, high, s.raw, x)
+    return out[:, :n] if np_ != n else out

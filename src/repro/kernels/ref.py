@@ -6,10 +6,11 @@ equality (these are *lossless* codecs — allclose with atol=0).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import codec
-from repro.core.api import CompressedTensor, decompress_array
+from repro.core.api import CompressedTensor
 from repro.core.dtypes import FloatFormat
 from repro.core.params import EnecParams
 
@@ -27,12 +28,46 @@ def decode_blocks_ref(streams, n_elems: int, fmt: FloatFormat, p: EnecParams):
     return codec.decode_blocks(streams, n_elems, fmt, p)
 
 
-def decompress_matmul_ref(x, ct: CompressedTensor, k: int, n: int):
-    """Decompress-then-matmul, the semantic the fused kernel must match."""
+def tiled_matmul_ref(x, w):
+    """Canonical serve matmul: x (M, K) @ w (K, N) -> (M, N) f32 realizing
+    the fused kernel's exact schedule — 128x128 weight tiles, zero-padded
+    ragged edges, k-major f32 accumulation per output strip.
+
+    This is the numeric contract of the weight-execution abstraction
+    (runtime/weights.py): every mode's ``matmul`` is either this function on
+    a materialized weight or the Pallas kernel on compressed tiles, and the
+    two are bit-identical by construction (same dot shapes, same values,
+    same accumulation order) — which is what makes dense / stream / fused
+    serve logits bit-identical.
+    """
     from .decompress_matmul import TILE
-    k_tiles, n_tiles = k // TILE, n // TILE
-    flat = decompress_array(ct)
-    tiles = flat.reshape(n_tiles, k_tiles, TILE, TILE)
-    w = tiles.transpose(1, 2, 0, 3).reshape(k, n)
-    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
-                   preferred_element_type=jnp.float32)
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    kp, np_ = -(-k // TILE) * TILE, -(-n // TILE) * TILE
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    if kp != k:
+        xf = jnp.pad(xf, ((0, 0), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        wf = jnp.pad(wf, ((0, kp - k), (0, np_ - n)))
+    strips = []
+    for ni in range(np_ // TILE):
+        acc = None
+        for ki in range(kp // TILE):
+            part = jax.lax.dot_general(  # the exact dot the kernel issues
+                xf[:, ki * TILE:(ki + 1) * TILE],
+                wf[ki * TILE:(ki + 1) * TILE, ni * TILE:(ni + 1) * TILE],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc = part if acc is None else acc + part
+        strips.append(acc)
+    out = jnp.concatenate(strips, axis=1)
+    return out[:, :n] if np_ != n else out
+
+
+def decompress_matmul_ref(x, ct: CompressedTensor, k: int, n: int):
+    """Decompress-untile-then-matmul: the fused kernel must match this
+    *bit-exactly* (both sides realize :func:`tiled_matmul_ref`)."""
+    from repro.core.api import untile_matmul_weight
+    return tiled_matmul_ref(x, untile_matmul_weight(ct, k, n))

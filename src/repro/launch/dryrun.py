@@ -93,16 +93,14 @@ def lower_cell(cfg, shape, mesh, *, compile_=True, variant="baseline"):
     """Build + lower (+ compile) one cell on one mesh. Returns stats dict.
 
     variant="streamed": serve with ENEC-compressed weights resident
-    (StreamedWeight pytree + in-step decompression) — the paper's §VI-C
-    deployment, lowered for the production mesh."""
+    (StreamedWeight pytree; the model resolves the handles in-step) — the
+    paper's §VI-C deployment, lowered for the production mesh."""
     model = build_model(cfg)
-    decompressor = None
     if variant == "streamed":
         from repro.core.params import EnecParams
         from repro.runtime import streaming
         p_enec = EnecParams(b=122, n=6, m=3, L=16, l=96)  # Table IV params
         params_abs = streaming.abstract_streamed_params(cfg, p_enec)
-        decompressor = streaming.decompress_sliced
     else:
         params_abs = abstract_params(cfg)
 
@@ -132,12 +130,7 @@ def lower_cell(cfg, shape, mesh, *, compile_=True, variant="baseline"):
                      donate_argnums=(0, 1))  # in-place params/opt update
         lowered = fn.lower(params_abs, opt_abs, specs)
     elif shape.kind == "prefill":
-        if decompressor is not None:
-            def step(params, batch):
-                return model.prefill_fn(params, batch, shape.seq_len,
-                                        decompressor=decompressor)
-        else:
-            step = build_prefill_step(model, max_len=shape.seq_len)
+        step = build_prefill_step(model, max_len=shape.seq_len)
         cspecs = named(sharding.cache_pspecs(
             cache_specs(cfg, shape.global_batch, shape.seq_len), mesh,
             shape.global_batch))
@@ -147,12 +140,7 @@ def lower_cell(cfg, shape, mesh, *, compile_=True, variant="baseline"):
                      out_shardings=(lspec, cspecs))
         lowered = fn.lower(params_abs, specs)
     else:  # decode
-        if decompressor is not None:
-            def step(params, cache, tokens):
-                return model.decode_fn(params, cache, tokens,
-                                       decompressor=decompressor)
-        else:
-            step = build_decode_step(model)
+        step = build_decode_step(model)
         cache_abs = specs["cache"]
         cspecs = named(sharding.cache_pspecs(cache_abs, mesh,
                                              shape.global_batch))

@@ -1,13 +1,23 @@
-"""Production serving launcher: batched generation with ENEC
-weight-streaming (the paper's §VI-C deployment).
+"""Production serving launcher: batched generation behind the weight-
+execution policy (paper §VI-C + the fused decode path of DESIGN.md §8).
+
+Modes (runtime/streaming.py, docs/SERVING.md):
+  dense   raw weights, canonical tiled matmul executor (baseline)
+  stream  ENEC streams decompressed layer-by-layer inside the step
+  fused   ENEC tile streams decompressed inside the matmul kernel itself
+          (default — the high-throughput decode route)
+
+All three produce bit-identical logits; they differ only in where weight
+bytes live and when they decompress.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
-        --batch 4 --tokens 8 [--dense]
+        --batch 4 --tokens 8 --mode fused
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 
 import jax
@@ -15,8 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import build_model
-from repro.runtime.streaming import (compress_params_for_streaming,
-                                     decompress_sliced, stream_stats)
+from repro.runtime.streaming import assign_weight_modes, stream_stats
 
 
 def main():
@@ -26,45 +35,62 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--mode", default=None,
+                    choices=("dense", "stream", "fused"),
+                    help="weight-execution mode (docs/SERVING.md); "
+                         "default fused")
     ap.add_argument("--dense", action="store_true",
-                    help="serve uncompressed weights (baseline)")
+                    help="deprecated alias for --mode dense")
+    ap.add_argument("--min-bytes", type=int, default=4096,
+                    help="smallest leaf worth compressing")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="stream-mode TP shard count for the block dim")
     args = ap.parse_args()
+    if args.dense and args.mode not in (None, "dense"):
+        ap.error("--dense conflicts with --mode " + args.mode)
+    mode = "dense" if args.dense else (args.mode or "fused")
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = dataclasses.replace(cfg, scan_layers=True)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    decomp = None
-    if not args.dense:
-        params = compress_params_for_streaming(params, min_bytes=4096,
-                                               shards=2)
-        decomp = decompress_sliced
-        print("[launch.serve] streaming:", stream_stats(params))
+    params = assign_weight_modes(params, mode=mode,
+                                 min_bytes=args.min_bytes,
+                                 shards=args.shards)
+    print(f"[launch.serve] mode={mode}:", stream_stats(params))
 
     max_len = args.prompt_len + args.tokens
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    prefill = jax.jit(lambda p, b: model.prefill_fn(
-        p, b, max_len, decompressor=decomp))
-    decode = jax.jit(lambda p, c, t: model.decode_fn(
-        p, c, t, decompressor=decomp))
+    prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, max_len))
+
+    # one jit'd decode step: model step + argmax sampling fused, KV cache
+    # donated — no per-step cache copy, no host round-trip for the token
+    donate = (1,) if jax.default_backend() != "cpu" else ()
+
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def decode_step(p, cache, tok):
+        logits, cache = model.decode_fn(p, cache, tok)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
     t0 = time.perf_counter()
     logits, cache = prefill(params, {"tokens": prompts})
     logits.block_until_ready()
     ttft = time.perf_counter() - t0
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    t0 = time.perf_counter()
     toks = [tok]
+    t0 = time.perf_counter()
     for _ in range(args.tokens - 1):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok, cache = decode_step(params, cache, tok)
         toks.append(tok)
     jax.block_until_ready(tok)
-    tpot = (time.perf_counter() - t0) / max(args.tokens - 1, 1)
+    dt = time.perf_counter() - t0
+    steps = max(args.tokens - 1, 1)
+    tpot = dt / steps
+    tok_s = args.batch * steps / dt
     print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
-          f"TPOT={tpot*1e3:.1f}ms mode={'dense' if args.dense else 'enec'}")
+          f"TPOT={tpot*1e3:.1f}ms tok/s={tok_s:.1f} mode={mode}")
     print("[launch.serve] seq0:", jnp.stack(toks, 1)[0].tolist())
 
 

@@ -23,10 +23,27 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.weights import WeightHandle
+
 ACT_DTYPE = jnp.bfloat16
 KV_CHUNK = 2048  # flash chunk; statically unrolled (<= 32 iterations at 32k)
 
 import os as _os
+
+
+def weight_matmul(w, x, eq: str):
+    """Contract x's last axis against the (K, N) weight ``w``.
+
+    ``w`` may be a WeightHandle (serve-time weight-execution modes: dense /
+    streamed / fused all realize the same canonical tiled contraction, so
+    logits are bit-identical across modes) or a plain array, which keeps the
+    legacy einsum path — train and raw-params serving are untouched.
+    """
+    if isinstance(w, WeightHandle):
+        lead = x.shape[:-1]
+        out = w.matmul(x.reshape(-1, x.shape[-1]))
+        return out.reshape(lead + (out.shape[-1],))
+    return jnp.einsum(eq, x, w, preferred_element_type=jnp.float32)
 
 
 def safe_einsum(eq, a, b):
@@ -119,12 +136,9 @@ def init_attention(key, s: AttnParamsShape, dtype=ACT_DTYPE):
 
 def _project_qkv(p, x, s: AttnParamsShape, positions, theta):
     b, t, _ = x.shape
-    q = jnp.einsum("btd,dh->bth", x, p["wq"],
-                   preferred_element_type=jnp.float32)
-    k = jnp.einsum("btd,dh->bth", x, p["wk"],
-                   preferred_element_type=jnp.float32)
-    v = jnp.einsum("btd,dh->bth", x, p["wv"],
-                   preferred_element_type=jnp.float32)
+    q = weight_matmul(p["wq"], x, "btd,dh->bth")
+    k = weight_matmul(p["wk"], x, "btd,dh->bth")
+    v = weight_matmul(p["wv"], x, "btd,dh->bth")
     q = q.reshape(b, t, s.n_heads, s.head_dim).astype(ACT_DTYPE)
     k = k.reshape(b, t, s.n_kv_heads, s.head_dim).astype(ACT_DTYPE)
     v = v.reshape(b, t, s.n_kv_heads, s.head_dim).astype(ACT_DTYPE)
@@ -240,8 +254,8 @@ def attention_block(p, x, s: AttnParamsShape, positions, theta, *,
     q, k, v = _project_qkv(p, x, s, positions, theta)
     out = flash_attention(q, k, v, causal=causal, prefix_len=prefix_len,
                           chunk=chunk)
-    out = jnp.einsum("btf,fd->btd", out.reshape(x.shape[0], x.shape[1], -1),
-                     p["wo"], preferred_element_type=jnp.float32).astype(x.dtype)
+    out = weight_matmul(p["wo"], out.reshape(x.shape[0], x.shape[1], -1),
+                        "btf,fd->btd").astype(x.dtype)
     return out, (k, v)
 
 
@@ -260,8 +274,8 @@ def attention_decode_block(p, x, s: AttnParamsShape, cache_kv, lengths,
     v_cache = v_cache.at[bidx, lengths].set(v_new[:, 0])
     out = decode_attention(q, k_cache, v_cache, lengths + 1,
                            score_shard=score_shard)
-    out = jnp.einsum("btf,fd->btd", out.reshape(b, 1, -1), p["wo"],
-                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = weight_matmul(p["wo"], out.reshape(b, 1, -1),
+                        "btf,fd->btd").astype(x.dtype)
     return out, (k_cache, v_cache)
 
 
@@ -318,13 +332,10 @@ def init_mlp(key, d_model: int, d_ff: int, dtype=ACT_DTYPE):
 
 def mlp_block(p, x, activation: str = "silu"):
     act = jax.nn.silu if activation == "silu" else jax.nn.gelu
-    g = jnp.einsum("btd,df->btf", x, p["w_gate"],
-                   preferred_element_type=jnp.float32)
-    u = jnp.einsum("btd,df->btf", x, p["w_up"],
-                   preferred_element_type=jnp.float32)
+    g = weight_matmul(p["w_gate"], x, "btd,df->btf")
+    u = weight_matmul(p["w_up"], x, "btd,df->btf")
     h = (act(g) * u).astype(ACT_DTYPE)
-    return jnp.einsum("btf,fd->btd", h, p["w_down"],
-                      preferred_element_type=jnp.float32).astype(x.dtype)
+    return weight_matmul(p["w_down"], h, "btf,fd->btd").astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------

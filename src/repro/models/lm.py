@@ -25,6 +25,8 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.weights import resolve as resolve_weights
+
 from . import moe as moe_lib
 from . import ssm as ssm_lib
 from . import xlstm as xlstm_lib
@@ -188,9 +190,14 @@ def _remat_policy(cfg):
     }[cfg.remat_policy]
 
 
-def _run_stack(params, cfg, x, positions, *, prefix_len=0, want_cache=False,
-               decompressor: Optional[Callable] = None):
-    """Forward through all periods. Returns (x, caches, aux_sum)."""
+def _run_stack(params, cfg, x, positions, *, prefix_len=0, want_cache=False):
+    """Forward through all periods. Returns (x, caches, aux_sum).
+
+    Weight-execution handles (runtime/weights.py) in the period stack are
+    resolved per layer slice: storage-only streams materialize here (XLA
+    overlaps layer l+1's decode with layer l's compute under scan), matmul
+    handles pass through to the layers.
+    """
     program = block_program(cfg)
     n_periods = cfg.n_layers // len(program)
     period = params["period"]
@@ -201,9 +208,7 @@ def _run_stack(params, cfg, x, positions, *, prefix_len=0, want_cache=False,
         aux_sum = jnp.float32(0)
         caches = []
         for pos, desc in enumerate(program):
-            p = sliced[pos]
-            if decompressor is not None:
-                p = decompressor(p)
+            p = resolve_weights(sliced[pos])
             x, cache_entry, aux = _apply_position(
                 p, desc, cfg, x, positions, prefix_len=prefix_len)
             caches.append(cache_entry)
@@ -255,19 +260,17 @@ def _assemble_inputs(params, cfg, batch):
     return x, positions, prefix_len
 
 
-def forward(params, cfg, batch, *, want_cache=False, decompressor=None):
+def forward(params, cfg, batch, *, want_cache=False):
     x, positions, prefix_len = _assemble_inputs(params, cfg, batch)
     x, caches, aux = _run_stack(params, cfg, x, positions,
-                                prefix_len=prefix_len, want_cache=want_cache,
-                                decompressor=decompressor)
+                                prefix_len=prefix_len, want_cache=want_cache)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
     return x, caches, aux, head, prefix_len
 
 
-def loss_fn(params, cfg, batch, decompressor=None):
-    x, _, aux, head, prefix_len = forward(params, cfg, batch,
-                                          decompressor=decompressor)
+def loss_fn(params, cfg, batch):
+    x, _, aux, head, prefix_len = forward(params, cfg, batch)
     logits = lm_logits(x[:, prefix_len:], head)
     targets = batch["targets"]
     mask = batch.get("loss_mask")
@@ -307,11 +310,10 @@ def init_cache(cfg, batch: int, max_len: int):
     return {"entries": entries, "lengths": jnp.zeros((batch,), jnp.int32)}
 
 
-def prefill_fn(params, cfg, batch, max_len: int, decompressor=None):
+def prefill_fn(params, cfg, batch, max_len: int):
     """Run the prompt, build the cache. Returns (last_token_logits, cache)."""
     x, caches, _, head, prefix_len = forward(params, cfg, batch,
-                                             want_cache=True,
-                                             decompressor=decompressor)
+                                             want_cache=True)
     b, t = x.shape[0], x.shape[1]
     logits = lm_logits(x[:, -1:], head)[:, 0]  # forward() already normed x
     cache = init_cache(cfg, b, max_len)
@@ -333,7 +335,7 @@ def prefill_fn(params, cfg, batch, max_len: int, decompressor=None):
     return logits, cache
 
 
-def decode_fn(params, cfg, cache, tokens, decompressor=None):
+def decode_fn(params, cfg, cache, tokens):
     """One decode step. tokens: (B,) int32. Returns (logits (B, V), cache)."""
     program = block_program(cfg)
     n_periods = cfg.n_layers // len(program)
@@ -349,9 +351,7 @@ def decode_fn(params, cfg, cache, tokens, decompressor=None):
     def period_body(x, sliced_params, sliced_cache):
         new_entries = []
         for pos, desc in enumerate(program):
-            p = sliced_params[pos]
-            if decompressor is not None:
-                p = decompressor(p)
+            p = resolve_weights(sliced_params[pos])
             x, new_c = _apply_position_step(p, desc, cfg, x,
                                             sliced_cache[pos], lengths)
             new_entries.append(new_c)

@@ -42,15 +42,16 @@ def build_model(cfg: ArchConfig) -> Model:
             init_cache=lambda batch, max_len, enc_len=4096: encdec.init_cache(
                 cfg, batch, max_len, enc_len),
         )
+    # weight-execution handles (runtime/weights.py) in ``params`` resolve
+    # inside the model — no decompressor hook to thread through
     return Model(
         cfg=cfg,
         init=partial(lm.init_params, cfg=cfg),
-        loss_fn=lambda params, batch, decompressor=None: lm.loss_fn(
-            params, cfg, batch, decompressor),
-        prefill_fn=lambda params, batch, max_len, decompressor=None:
-            lm.prefill_fn(params, cfg, batch, max_len, decompressor),
-        decode_fn=lambda params, cache, tokens, decompressor=None:
-            lm.decode_fn(params, cfg, cache, tokens, decompressor),
+        loss_fn=lambda params, batch: lm.loss_fn(params, cfg, batch),
+        prefill_fn=lambda params, batch, max_len: lm.prefill_fn(
+            params, cfg, batch, max_len),
+        decode_fn=lambda params, cache, tokens: lm.decode_fn(
+            params, cfg, cache, tokens),
         init_cache=lambda batch, max_len: lm.init_cache(cfg, batch, max_len),
     )
 

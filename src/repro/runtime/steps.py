@@ -3,7 +3,7 @@ the launcher, the dry-run and the examples."""
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -11,13 +11,10 @@ import jax.numpy as jnp
 from repro.optim import adamw
 
 
-def build_train_step(model, opt_cfg: adamw.AdamWConfig,
-                     decompressor: Optional[Callable] = None) -> Callable:
+def build_train_step(model, opt_cfg: adamw.AdamWConfig) -> Callable:
     """(params, opt_state, batch) -> (params, opt_state, metrics)."""
     def loss_of(params, batch):
-        if decompressor is None:
-            return model.loss_fn(params, batch)
-        return model.loss_fn(params, batch, decompressor=decompressor)
+        return model.loss_fn(params, batch)
 
     def train_step(params, opt_state, batch):
         (loss, metrics), grads = jax.value_and_grad(

@@ -1,55 +1,82 @@
-"""Weight-streaming serving: ENEC-compressed weights resident in HBM,
-decompressed layer-by-layer inside the serve step (paper §VI-C).
+"""Weight-execution policy: ENEC-compressed weights resident in HBM,
+decompressed either layer-by-layer inside the serve step (paper §VI-C) or
+tile-by-tile inside the matmul kernel itself (fused mode, DESIGN.md §8).
 
-The paper overlaps layer l+1's decompression with layer l's forward on the
-NPU; here the layer stack is a ``lax.scan`` whose body decompresses its
-slice of the compressed streams first — XLA's latency-hiding scheduler
-overlaps the stream DMA + decode of iteration l+1 with iteration l's
-matmuls, which is the same pipeline one level down the hierarchy.
+This module decides, per parameter leaf, HOW serve-time weights execute —
+the handle classes themselves live in ``runtime.weights``:
 
-TP locality: a weight whose axis ``k`` is model-sharded is compressed in a
-*moveaxis(k -> 0)* layout with the block dimension sharded on "model".
-Decompression is then shard-local (blocks stay on their device), the
-un-permute is a metadata transpose, and no resharding collectives appear on
-the latency path.
+  raw      small / non-stacked leaves: untouched arrays
+  dense    big matmul weights wrapped in DenseWeight (canonical executor,
+           raw bytes in HBM) — the baseline the other modes compare against
+  stream   StreamedWeight: per-layer ENEC streams, decompressed inside the
+           step; ``lax.scan`` slices the streams so XLA's latency-hiding
+           scheduler overlaps layer l+1's stream DMA + decode with layer
+           l's matmuls (the paper's pipeline one level down the hierarchy)
+  fused    FusedWeight: tile-wise ENEC streams consumed by the fused
+           decompress+matmul Pallas kernel — the dense weight never exists
+           in HBM, so decode-phase effective HBM bandwidth rises by the
+           compression ratio
+
+TP locality (stream mode): a weight whose axis ``k`` is model-sharded is
+compressed in a *moveaxis(k -> 0)* layout with the block dimension sharded
+on "model".  Decompression is then shard-local (blocks stay on their
+device), the un-permute is a metadata transpose, and no resharding
+collectives appear on the latency path.  Fused tile streams are block-
+ordered (n, k) and not TP-shardable, so fused mode forces ``shards=1``.
 
 Only leaves >= ``min_bytes`` are compressed (norms/biases stay raw —
 negligible bytes, and the decode cost would not amortize).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import (CompressedTensor, abstract_compressed,
-                            compress_stacked_many, decompress_array)
+from repro.core.api import (SUPPORTED_FLOAT_DTYPES, CompressedTensor,
+                            abstract_compressed, compress_stacked_many,
+                            matmul_tiles)
 from repro.core.params import EnecParams
-from repro.runtime import sharding as sh
+from repro.runtime.weights import (DenseWeight, FusedWeight,  # noqa: F401
+                                   StreamedWeight, WeightHandle, is_handle,
+                                   resolve)
 
 MIN_STREAM_BYTES = 1 << 20  # 1 MiB
 STREAM_SHARDS = 16          # production TP width (divisors also work)
 
+WEIGHT_MODES = ("dense", "stream", "fused")
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class StreamedWeight:
-    """A stacked weight (L, ...) stored as per-layer ENEC streams."""
-    ct: CompressedTensor                       # arrays have leading (L,) dim
-    tp_axis: int = dataclasses.field(metadata=dict(static=True))
-    layer_shape: tuple = dataclasses.field(metadata=dict(static=True))
-    dtype_str: str = dataclasses.field(metadata=dict(static=True))
+# Stacked 2-D weights consumed as x @ W by the attention/MLP layers — the
+# decode path's dominant weight bytes, and the set the fused kernel (and the
+# canonical tiled executor) can take over.  MoE expert stacks / SSM / xLSTM
+# params keep the materialize path.
+MATMUL_LEAF_NAMES = frozenset(
+    {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"})
 
 
-def _is_ct(x):
-    return isinstance(x, (StreamedWeight, CompressedTensor))
+def _pstr(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "name",
+                    getattr(k, "idx", k)))) for k in path)
+
+
+def stream_eligible(pstr: str, shape, dtype,
+                    min_bytes: int = MIN_STREAM_BYTES) -> bool:
+    """The ONE streamed-leaf predicate (shared by the concrete policy and
+    the abstract dry-run path, which used to carry diverging copies): a
+    leaf is compressible iff it is a stacked (L, ...) float stack big
+    enough to amortize the in-step decode."""
+    stacked = "period" in pstr or "stack" in pstr
+    nbytes = int(np.prod(shape)) * jnp.dtype(dtype).itemsize
+    return (stacked and nbytes >= min_bytes and len(shape) >= 3
+            and jnp.dtype(dtype) in SUPPORTED_FLOAT_DTYPES)
 
 
 def _tp_axis_for(path: str, shape) -> int:
-    """Which axis is model-sharded at serve time (mirror of sharding.py)."""
+    """Which axis is model-sharded at serve time (single source of truth
+    for both the concrete and abstract streamed trees; mirror of
+    sharding.py's name rules)."""
     name = path.rsplit("/", 1)[-1]
     if name == "embed":
         return 0
@@ -60,12 +87,99 @@ def _tp_axis_for(path: str, shape) -> int:
     return len(shape) - 1
 
 
-def compress_params_for_streaming(params, *, shared_params: Optional[EnecParams] = None,
+def _is_matmul_pos(pstr: str, ndim: int) -> bool:
+    return pstr.rsplit("/", 1)[-1] in MATMUL_LEAF_NAMES and ndim == 3
+
+
+# ---------------------------------------------------------------------------
+# the policy: params tree -> handle tree
+# ---------------------------------------------------------------------------
+
+def assign_weight_modes(params, *, mode: str = "fused",
+                        shared_params: Optional[EnecParams] = None,
+                        min_bytes: int = MIN_STREAM_BYTES,
+                        shards: int = STREAM_SHARDS):
+    """Assign every leaf a weight-execution mode from its path, shape,
+    bytes, and TP constraints; compress everything in ONE batched pipeline
+    pass (``compress_stacked_many`` — O(#buckets) encode dispatches).
+
+    mode="dense":  matmul positions wrapped in DenseWeight (canonical
+                   executor), everything else raw.
+    mode="stream": every eligible leaf becomes StreamedWeight; matmul
+                   positions execute the canonical contraction on the
+                   just-decompressed weight, the rest materialize.
+    mode="fused":  matmul positions become FusedWeight tile streams
+                   (``shards`` is forced to 1 — tile streams are not
+                   TP-shardable); other eligible leaves stream as above.
+
+    The never-worse escape is intact in every mode: a leaf whose streams
+    would not beat raw bytes falls back to DenseWeight (matmul positions,
+    so the executor — and therefore the logits — stay identical) or to the
+    raw array.
+    """
+    if mode not in WEIGHT_MODES:
+        raise ValueError(f"unknown weight mode {mode!r}; "
+                         f"expected one of {WEIGHT_MODES}")
+    if mode == "fused":
+        shards = 1
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [None] * len(flat)
+    jobs = []   # dicts: slot, kind, arr (to compress), per-kind metadata
+    for slot, (path, leaf) in enumerate(flat):
+        pstr = _pstr(path)
+        if not stream_eligible(pstr, leaf.shape, leaf.dtype, min_bytes):
+            out[slot] = leaf
+            continue
+        matmul_pos = _is_matmul_pos(pstr, leaf.ndim)
+        if mode == "dense":
+            out[slot] = DenseWeight(w=leaf) if matmul_pos else leaf
+            continue
+        if mode == "fused" and matmul_pos:
+            jobs.append(dict(slot=slot, kind="fused", leaf=leaf,
+                             arr=matmul_tiles(leaf),
+                             k=leaf.shape[1], n=leaf.shape[2]))
+            continue
+        tp_axis = _tp_axis_for(pstr, leaf.shape[1:])
+        jobs.append(dict(slot=slot, kind="stream", leaf=leaf,
+                         arr=jnp.moveaxis(leaf, 1 + tp_axis, 1),
+                         tp_axis=tp_axis, layer_shape=leaf.shape[1:],
+                         matmul_pos=matmul_pos))
+    cts = compress_stacked_many([j["arr"] for j in jobs],
+                                p=shared_params, shards=shards)
+    for j, ct in zip(jobs, cts):
+        leaf = j["leaf"]
+        if j["kind"] == "fused":
+            # tile accounting runs on the zero-padded layout; re-check the
+            # escape against the true (unpadded) raw bytes
+            if ct is not None and ct.nbytes_wire() >= leaf.size \
+                    * leaf.dtype.itemsize:
+                ct = None
+            out[j["slot"]] = (DenseWeight(w=leaf) if ct is None else
+                              FusedWeight(ct=ct, k=j["k"], n=j["n"],
+                                          dtype_str=str(leaf.dtype)))
+        elif ct is None:  # incompressible / const escape
+            out[j["slot"]] = DenseWeight(w=leaf) if j["matmul_pos"] else leaf
+        else:
+            out[j["slot"]] = StreamedWeight(
+                ct=ct, tp_axis=j["tp_axis"],
+                layer_shape=tuple(j["layer_shape"]),
+                dtype_str=str(leaf.dtype),
+                execution="matmul" if j["matmul_pos"] else "materialize")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# legacy stream-everything entry points (checkpointing, benches, dry-run)
+# ---------------------------------------------------------------------------
+
+def compress_params_for_streaming(params, *,
+                                  shared_params: Optional[EnecParams] = None,
                                   min_bytes: int = MIN_STREAM_BYTES,
                                   shards: int = STREAM_SHARDS):
-    """params tree -> same-structure tree with big stacked leaves replaced by
-    StreamedWeight.  Leaves under ``period``/stacks keep their leading layer
-    dim in the stream arrays so ``lax.scan`` slices them layer by layer.
+    """params tree -> same-structure tree with big stacked leaves replaced
+    by materialize-mode StreamedWeight (the §VI-C deployment: every stream
+    decompresses to a dense weight inside the step; serve output is
+    bit-identical to serving the raw tree).
 
     Device-resident batched pipeline (docs/PIPELINE.md): every eligible
     ``(L, ...)`` stack is handed to ``compress_stacked_many``, which computes
@@ -77,63 +191,49 @@ def compress_params_for_streaming(params, *, shared_params: Optional[EnecParams]
     """
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = [None] * len(flat)
-    eligible = []   # (slot, leaf, perm, tp_axis, layer_shape)
+    eligible = []   # (slot, leaf, perm, tp_axis)
     for slot, (path, leaf) in enumerate(flat):
-        pstr = "/".join(str(getattr(k, "key", getattr(k, "name",
-                        getattr(k, "idx", k)))) for k in path)
-        stacked = "period" in pstr or "stack" in pstr
-        nbytes = leaf.size * leaf.dtype.itemsize
-        if (not stacked or nbytes < min_bytes or leaf.ndim < 3
-                or leaf.dtype not in (jnp.bfloat16, jnp.float16, jnp.float32)):
+        pstr = _pstr(path)
+        if not stream_eligible(pstr, leaf.shape, leaf.dtype, min_bytes):
             out[slot] = leaf
             continue
-        layer_shape = leaf.shape[1:]
-        tp_axis = _tp_axis_for(pstr, layer_shape)
+        tp_axis = _tp_axis_for(pstr, leaf.shape[1:])
         perm = jnp.moveaxis(leaf, 1 + tp_axis, 1)       # (L, tp_dim, ...)
-        eligible.append((slot, leaf, perm, tp_axis, layer_shape))
+        eligible.append((slot, leaf, perm, tp_axis))
     cts = compress_stacked_many([e[2] for e in eligible],
                                 p=shared_params, shards=shards)
-    for (slot, leaf, _, tp_axis, layer_shape), ct in zip(eligible, cts):
+    for (slot, leaf, _, tp_axis), ct in zip(eligible, cts):
         if ct is None:
             out[slot] = leaf                            # incompressible/const
             continue
         out[slot] = StreamedWeight(ct=ct, tp_axis=tp_axis,
-                                   layer_shape=tuple(layer_shape),
+                                   layer_shape=tuple(leaf.shape[1:]),
                                    dtype_str=str(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def decompress_sliced(p_sliced):
-    """The ``decompressor`` hook for lm.py: StreamedWeight (layer slice,
-    leading L dim already removed by scan/indexing) -> dense weight."""
-    def one(leaf):
-        if not isinstance(leaf, StreamedWeight):
-            return leaf
-        w_perm = decompress_array(leaf.ct)              # moveaxis'd layout
-        w = jnp.moveaxis(w_perm, 0, leaf.tp_axis)
-        return w.astype(jnp.dtype(leaf.dtype_str))
-    return jax.tree.map(one, p_sliced,
-                        is_leaf=lambda x: isinstance(x, StreamedWeight))
+    """Materialize every storage-only handle in a layer slice (the retired
+    ``decompressor`` hook's behaviour — the model now does this itself via
+    ``runtime.weights.resolve``; kept for direct/manual use)."""
+    return resolve(p_sliced)
 
 
 def abstract_streamed_params(cfg, p: EnecParams, *,
                              min_bytes: int = MIN_STREAM_BYTES,
                              shards: int = STREAM_SHARDS):
     """ShapeDtypeStruct version of compress_params_for_streaming — lets the
-    dry-run lower the streamed serve step without allocating anything."""
+    dry-run lower the streamed serve step without allocating anything.
+    Shares :func:`stream_eligible` / :func:`_tp_axis_for` with the concrete
+    path so the two cannot drift."""
     from repro.models.registry import abstract_params
 
     params = abstract_params(cfg)
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
-        pstr = "/".join(str(getattr(k, "key", getattr(k, "name",
-                        getattr(k, "idx", k)))) for k in path)
-        stacked = "period" in pstr or "stack" in pstr
-        nbytes = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
-        if (not stacked or nbytes < min_bytes or len(leaf.shape) < 3
-                or jnp.dtype(leaf.dtype) not in (jnp.bfloat16, jnp.float16,
-                                                 jnp.float32)):
+        pstr = _pstr(path)
+        if not stream_eligible(pstr, leaf.shape, leaf.dtype, min_bytes):
             out.append(leaf)
             continue
         layer_shape = leaf.shape[1:]
@@ -155,22 +255,30 @@ def abstract_streamed_params(cfg, p: EnecParams, *,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def stream_stats(streamed) -> dict:
-    """Bytes accounting over a streamed tree."""
+def stream_stats(tree) -> dict:
+    """Bytes + handle-count accounting over a weight-execution tree."""
     total_raw = total_dev = 0
-    n_streamed = 0
-    for leaf in jax.tree.leaves(
-            streamed, is_leaf=lambda x: isinstance(x, StreamedWeight)):
+    counts = {"streamed_tensors": 0, "fused_tensors": 0, "dense_handles": 0}
+    for leaf in jax.tree.leaves(tree, is_leaf=is_handle):
         if isinstance(leaf, StreamedWeight):
-            n_streamed += 1
-            l = leaf.ct.streams.mask.shape[0]
+            counts["streamed_tensors"] += 1
+            n_layers = leaf.ct.streams.mask.shape[0]
             per_layer_raw = int(np.prod(leaf.layer_shape)) \
                 * jnp.dtype(leaf.dtype_str).itemsize
-            total_raw += l * per_layer_raw
+            total_raw += n_layers * per_layer_raw
             total_dev += leaf.ct.nbytes_device()
+        elif isinstance(leaf, FusedWeight):
+            counts["fused_tensors"] += 1
+            n_layers = leaf.ct.streams.mask.shape[0]
+            total_raw += n_layers * leaf.k * leaf.n \
+                * jnp.dtype(leaf.dtype_str).itemsize
+            total_dev += leaf.ct.nbytes_device()
+        elif isinstance(leaf, DenseWeight):
+            counts["dense_handles"] += 1
+            total_raw += leaf.w.size * leaf.w.dtype.itemsize
+            total_dev += leaf.w.size * leaf.w.dtype.itemsize
         elif hasattr(leaf, "size"):
             total_raw += leaf.size * leaf.dtype.itemsize
             total_dev += leaf.size * leaf.dtype.itemsize
-    return {"streamed_tensors": n_streamed, "raw_bytes": total_raw,
-            "device_bytes": total_dev,
+    return {**counts, "raw_bytes": total_raw, "device_bytes": total_dev,
             "hbm_ratio": total_raw / max(total_dev, 1)}

@@ -1,0 +1,136 @@
+"""Weight-execution handles: HOW a serve-time weight is stored and executed.
+
+The serving stack used to thread a ``decompressor=`` pytree-materialization
+hook through the model; this module replaces it with a first-class
+abstraction.  Every big weight leaf is assigned one of three execution
+modes by the policy layer (``runtime.streaming.assign_weight_modes``):
+
+  dense    :class:`DenseWeight`     raw array resident in HBM
+  stream   :class:`StreamedWeight`  ENEC streams in HBM; decompressed to a
+                                    dense weight inside the serve step
+  fused    :class:`FusedWeight`     ENEC tile streams in HBM; decompressed
+                                    INSIDE the matmul kernel's VMEM tiles —
+                                    the dense weight never exists in HBM
+
+Handles share one interface: ``matmul(x)`` contracts (M, K) activations
+against the (K, N) weight, ``materialize()`` returns the dense weight.
+Every mode's ``matmul`` realizes the *same* canonical contraction — the
+128x128 tile grid with k-major f32 accumulation of
+``kernels.ref.tiled_matmul_ref``, which is the exact schedule the fused
+Pallas kernel executes — so serve logits are bit-identical across modes:
+the mode changes where weight bytes live and when they decompress, never
+the numerics.
+
+Handles are registered pytrees whose array fields carry a leading ``(L,)``
+layer-stack dim; ``lax.scan`` (or ``tree.map(a[i])`` on the unrolled path)
+slices them per layer, then :func:`resolve` materializes storage-only
+handles while matmul-capable ones pass through to the layers
+(``models.layers.weight_matmul``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import (CompressedTensor, decompress_array,
+                            untile_matmul_weight)
+from repro.kernels.ref import tiled_matmul_ref
+
+
+class WeightHandle:
+    """Base marker for weight-execution handles.
+
+    Subclasses implement ``matmul(x2d) -> (M, N) f32`` (the canonical tiled
+    contraction) and ``materialize() -> (K, N)`` (the dense weight, bit-exact
+    for compressed modes — ENEC is lossless).
+    """
+
+    def matmul(self, x):
+        raise NotImplementedError
+
+    def materialize(self):
+        raise NotImplementedError
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DenseWeight(WeightHandle):
+    """Raw weight executed through the canonical serve matmul (baseline
+    mode, and the fallback when a leaf turns out incompressible)."""
+    w: jax.Array  # (..., K, N); leading (L,) when stacked
+
+    def materialize(self):
+        return self.w
+
+    def matmul(self, x):
+        return tiled_matmul_ref(x, self.w)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StreamedWeight(WeightHandle):
+    """A stacked weight (L, ...) stored as per-layer ENEC streams.
+
+    Compressed in a *moveaxis(tp_axis -> 0)* layout so decompression stays
+    shard-local under TP (see runtime/streaming.py).  ``execution`` is the
+    resolve-time behaviour: "materialize" leaves (non-matmul consumers like
+    MoE experts / SSM params) are decompressed to dense arrays before the
+    layer runs; "matmul" leaves pass through to the layers and execute the
+    canonical tiled contraction on the just-decompressed weight.
+    """
+    ct: CompressedTensor                       # arrays have leading (L,) dim
+    tp_axis: int = dataclasses.field(metadata=dict(static=True))
+    layer_shape: tuple = dataclasses.field(metadata=dict(static=True))
+    dtype_str: str = dataclasses.field(metadata=dict(static=True))
+    execution: str = dataclasses.field(default="materialize",
+                                       metadata=dict(static=True))
+
+    def materialize(self):
+        w_perm = decompress_array(self.ct)              # moveaxis'd layout
+        w = jnp.moveaxis(w_perm, 0, self.tp_axis)
+        return w.astype(jnp.dtype(self.dtype_str))
+
+    def matmul(self, x):
+        return tiled_matmul_ref(x, self.materialize())
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FusedWeight(WeightHandle):
+    """A (L, K, N) matmul weight stored as ENEC *tile* streams and executed
+    by the fused decompress+matmul Pallas kernel — the dense weight never
+    materializes in HBM.  ``k``/``n`` are the unpadded logical dims (ragged
+    edges ride the zero-padded tile layout of ``core.api.matmul_tiles``)."""
+    ct: CompressedTensor                       # tile streams, leading (L,)
+    k: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    dtype_str: str = dataclasses.field(metadata=dict(static=True))
+
+    def matmul(self, x):
+        from repro.kernels import ops  # lazy: keep module import light
+        return ops.decompress_matmul(x, self.ct, self.k, self.n)
+
+    def materialize(self):
+        return untile_matmul_weight(self.ct, self.k, self.n).astype(
+            jnp.dtype(self.dtype_str))
+
+
+def is_handle(x) -> bool:
+    return isinstance(x, WeightHandle)
+
+
+def resolve(tree):
+    """Per-layer handle resolution — the serve step's replacement for the
+    retired ``decompressor=`` hook.  Storage-only handles (StreamedWeight in
+    "materialize" execution) become dense arrays; matmul-capable handles
+    pass through for the layers to execute; everything else is untouched.
+    Called on layer slices inside ``lax.scan`` / the unrolled loop, so XLA
+    overlaps layer l+1's decompression with layer l's compute as before.
+    """
+    def one(leaf):
+        if isinstance(leaf, StreamedWeight) and leaf.execution != "matmul":
+            return leaf.materialize()
+        return leaf
+    return jax.tree.map(one, tree, is_leaf=is_handle)

@@ -73,24 +73,89 @@ def test_decode_kernel_param_grid(m, n_width, L):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(bits))
 
 
+def _fused_case(m, k, n, dt, seed):
+    rng = np.random.default_rng(seed)
+    wm = jnp.asarray((rng.standard_normal((k, n)) * 0.02
+                      ).astype("float32")).astype(dt)
+    ct = tile_weights_for_fusion(wm)   # per-stack searched params (pipeline)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype("float32")).astype(dt)
+    return wm, ct, x
+
+
+def _assert_fused_exact(x, ct, wm, k, n):
+    got = decompress_matmul(x, ct, k, n)
+    # the kernel realizes tiled_matmul_ref's exact schedule: bit-identical
+    want = ref.decompress_matmul_ref(x, ct, k, n)
+    np.testing.assert_array_equal(np.asarray(got).view(np.uint32),
+                                  np.asarray(want).view(np.uint32))
+    want2 = ref.tiled_matmul_ref(x, wm)  # decompression is lossless
+    np.testing.assert_array_equal(np.asarray(got).view(np.uint32),
+                                  np.asarray(want2).view(np.uint32))
+    # and against the plain uncompressed matmul (accumulation-order tol)
+    direct = np.asarray(jnp.dot(x.astype(jnp.float32),
+                                wm.astype(jnp.float32)))
+    np.testing.assert_allclose(np.asarray(got), direct, rtol=2e-2, atol=1e-2)
+
+
+# non-square tile counts (2x3, 4x2) and ragged K/N that ride the
+# zero-padded tile layout (250 -> 256, 120 -> 128)
 @pytest.mark.parametrize("mkn", [(8, 256, 384), (16, 128, 128),
-                                 (4, 512, 256)])
+                                 (4, 512, 256), (8, 250, 384),
+                                 (4, 128, 120)])
 def test_fused_decompress_matmul(mkn):
     m, k, n = mkn
-    rng = np.random.default_rng(k)
+    wm, ct, x = _fused_case(m, k, n, jnp.bfloat16, seed=k + n)
+    _assert_fused_exact(x, ct, wm, k, n)
+
+
+@pytest.mark.parametrize("fmt_key", ["fp16", "fp32"])
+def test_fused_decompress_matmul_formats(fmt_key):
+    _, dt = FMTS[fmt_key]
+    m, k, n = 4, 256, 128
+    wm, ct, x = _fused_case(m, k, n, dt, seed=11)
+    assert ct.fmt_name == fmt_key
+    _assert_fused_exact(x, ct, wm, k, n)
+
+
+def test_fused_matmul_no_high_stream_edge():
+    # m == n: every exponent fits the low stream, the high stream has zero
+    # width and the kernel substitutes a dummy byte
+    rng = np.random.default_rng(7)
+    k, n = 256, 128
     wm = jnp.asarray((rng.standard_normal((k, n)) * 0.02
                       ).astype("float32")).astype(jnp.bfloat16)
-    p = search_for_array(np.asarray(jax.device_get(wm)), BF16,
-                         block_elems=128 * 128)
+    exp = ((np.asarray(jax.device_get(wm)).view(np.uint16) >> 7) & 0xFF)
+    lo, hi = int(exp.min()), int(exp.max())
+    nb = max((hi - lo).bit_length() + 1, 2)
+    p = EnecParams(b=hi, n=nb, m=nb, L=16, l=lo)
     ct = tile_weights_for_fusion(wm, p)
-    x = jnp.asarray(rng.standard_normal((m, k)).astype("float32"))
-    got = decompress_matmul(x, ct, k, n)
-    want = ref.decompress_matmul_ref(x, ct, k, n)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-6)
-    # and against the uncompressed matmul (weights are recovered exactly)
-    direct = np.asarray(jnp.dot(x, wm.astype(jnp.float32)))
-    np.testing.assert_allclose(np.asarray(got), direct, rtol=2e-2, atol=1e-2)
+    assert codec.stream_shapes(128 * 128, BF16, ct.params)["high"] == 0
+    x = jnp.asarray(rng.standard_normal((4, k)).astype("float32"))
+    _assert_fused_exact(x, ct, wm, k, n)
+
+
+def test_fused_matmul_stacked_streams_slice_in_scan():
+    # (L, K, N) weights compress as one stacked dispatch; lax.scan slices
+    # the tile streams per layer and feeds the kernel unmodified
+    import dataclasses as dc
+    from repro.core.api import tile_weights_for_fusion_many
+    rng = np.random.default_rng(3)
+    L, k, n = 3, 256, 128
+    ws = jnp.asarray((rng.standard_normal((L, k, n)) * 0.02
+                      ).astype("float32")).astype(jnp.bfloat16)
+    ct = tile_weights_for_fusion_many([ws])[0]
+    assert ct is not None and ct.streams.mask.shape[0] == L
+    x = jnp.asarray(rng.standard_normal((4, k)).astype("float32"))
+
+    def body(carry, streams):
+        out = decompress_matmul(carry, dc.replace(ct, streams=streams), k, n)
+        return carry, out
+
+    _, outs = jax.jit(lambda c, s: jax.lax.scan(body, c, s))(x, ct.streams)
+    for i in range(L):
+        want = ref.tiled_matmul_ref(x, ws[i])
+        np.testing.assert_array_equal(np.asarray(outs[i]).view(np.uint32),
+                                      np.asarray(want).view(np.uint32))
 
 
 def test_kernel_jit_wrappers():

@@ -189,7 +189,7 @@ def test_streaming_is_batched_and_device_resident(monkeypatch):
     from repro.configs import get_smoke_config
     from repro.models import build_model
     from repro.runtime.streaming import (compress_params_for_streaming,
-                                         decompress_sliced, stream_stats)
+                                         stream_stats)
 
     cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
                               scan_layers=True, n_layers=4)
@@ -216,8 +216,7 @@ def test_streaming_is_batched_and_device_resident(monkeypatch):
     pb = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0,
                                        cfg.vocab_size)}
     l_ref, _ = model.prefill_fn(params, pb, 16)
-    l_str, _ = model.prefill_fn(streamed, pb, 16,
-                                decompressor=decompress_sliced)
+    l_str, _ = model.prefill_fn(streamed, pb, 16)
     assert float(jnp.abs(l_ref - l_str).max()) == 0.0
 
 

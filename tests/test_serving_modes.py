@@ -1,0 +1,195 @@
+"""ISSUE 2: the weight-execution policy behind the unified decode path.
+
+dense / stream / fused serving must produce BIT-IDENTICAL logits (every
+mode's matmul realizes the canonical tiled contraction of
+``kernels.ref.tiled_matmul_ref``); fused tile compression must ride the
+batched pipeline (one encode dispatch per encoder bucket, verified via
+``encode_cache_stats``); handles must materialize bit-exactly; and the
+abstract (dry-run) streaming path must agree with the concrete one on
+which leaves stream (the shared-eligibility dedupe).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import api as enec_api
+from repro.core.params import EnecParams
+from repro.models import build_model
+from repro.runtime.streaming import (MATMUL_LEAF_NAMES, WEIGHT_MODES,
+                                     abstract_streamed_params,
+                                     assign_weight_modes,
+                                     compress_params_for_streaming,
+                                     decompress_sliced, stream_stats)
+from repro.runtime.weights import (DenseWeight, FusedWeight, StreamedWeight,
+                                   WeightHandle, is_handle, resolve)
+
+
+def _u32(x):
+    return np.asarray(jax.device_get(x)).view(np.uint32)
+
+
+def _flat_named(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_handle)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "name",
+                        getattr(k, "idx", k)))) for k in path)
+        out.append((pstr, leaf))
+    return out
+
+
+def _serve(model, tree, pb, max_len):
+    logits, cache = model.prefill_fn(tree, pb, max_len)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dec, _ = model.decode_fn(tree, cache, tok)
+    return np.asarray(logits), np.asarray(dec)
+
+
+@pytest.mark.parametrize("scan", [True, False])
+def test_three_mode_logits_bit_parity(scan):
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=scan)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    pb = {"tokens": jax.random.randint(jax.random.key(1), (2, 12), 0,
+                                       cfg.vocab_size)}
+    outs = {m: _serve(model, assign_weight_modes(params, mode=m,
+                                                 min_bytes=1024, shards=2),
+                      pb, 24)
+            for m in WEIGHT_MODES}
+    for mode in ("stream", "fused"):
+        for ref_l, got_l in zip(outs["dense"], outs[mode]):
+            np.testing.assert_array_equal(ref_l.view(np.uint32),
+                                          got_l.view(np.uint32),
+                                          err_msg=mode)
+
+
+def test_moe_fused_mode_parity_and_streamed_experts():
+    cfg = get_smoke_config("phi3_5_moe_42b_a6_6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    pb = {"tokens": jax.random.randint(jax.random.key(3), (2, 8), 0,
+                                       cfg.vocab_size)}
+    fused = assign_weight_modes(params, mode="fused", min_bytes=1024)
+    # expert stacks are 3-D per layer: they stream (materialize), not fuse
+    kinds = {pstr.rsplit("/", 1)[-1]: type(leaf)
+             for pstr, leaf in _flat_named(fused) if is_handle(leaf)}
+    assert kinds.get("e_gate", StreamedWeight) is StreamedWeight
+    assert any(t is FusedWeight for t in kinds.values())
+    ref_out = _serve(model, assign_weight_modes(params, mode="dense",
+                                                min_bytes=1024), pb, 16)
+    got_out = _serve(model, fused, pb, 16)
+    for a, b in zip(ref_out, got_out):
+        np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+
+def test_fused_assignment_and_fallback_types():
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tree = assign_weight_modes(params, mode="fused", min_bytes=1024)
+    st = stream_stats(tree)
+    assert st["fused_tensors"] >= 3
+    for pstr, leaf in _flat_named(tree):
+        name = pstr.rsplit("/", 1)[-1]
+        if name in MATMUL_LEAF_NAMES:
+            # matmul positions are ALWAYS handles (fused, or the dense
+            # fallback when tiles don't beat raw bytes) so the executor —
+            # and the logits — never depend on compressibility
+            assert isinstance(leaf, (FusedWeight, DenseWeight)), pstr
+        else:
+            assert not isinstance(leaf, (FusedWeight, DenseWeight)), pstr
+
+
+def test_fused_policy_batches_encode_dispatches():
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    enec_api.reset_encode_cache_stats()
+    tree = assign_weight_modes(params, mode="fused", min_bytes=1024)
+    st = enec_api.encode_cache_stats()
+    handles = [leaf for _, leaf in _flat_named(tree)
+               if isinstance(leaf, (FusedWeight, StreamedWeight))]
+    assert len(handles) >= 3
+    # every eligible leaf went through compression (fallbacks included), yet
+    # encodes batch into one dispatch per encoder bucket (fmt, params-key,
+    # block_elems) — never one per tensor, never one per layer
+    n_eligible = sum(1 for _, leaf in _flat_named(tree) if is_handle(leaf))
+    buckets = {enec_api._encoder_key(h.ct.fmt_name, h.ct.params,
+                                     h.ct.block_elems) for h in handles}
+    assert len(buckets) <= st["dispatches"] <= n_eligible
+    assert st["dispatches"] < n_eligible * cfg.n_layers
+
+
+def test_handles_materialize_bit_exact():
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    orig = dict(_flat_named(params))
+    for mode in ("stream", "fused"):
+        tree = assign_weight_modes(params, mode=mode, min_bytes=1024,
+                                   shards=2)
+        for pstr, leaf in _flat_named(tree):
+            if not is_handle(leaf):
+                continue
+            ref_leaf = orig[pstr]
+            for i in range(ref_leaf.shape[0]):   # per layer slice
+                sliced = jax.tree.map(lambda a: a[i], leaf)
+                got = sliced.materialize()
+                np.testing.assert_array_equal(
+                    np.asarray(got).view(np.uint8),
+                    np.asarray(ref_leaf[i]).view(np.uint8),
+                    err_msg=f"{mode}:{pstr}[{i}]")
+
+
+def test_resolve_materializes_storage_handles_only():
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    streamed = compress_params_for_streaming(params, min_bytes=1024,
+                                             shards=2)
+    sliced = jax.tree.map(lambda a: a[0], streamed["period"])
+    resolved = resolve(sliced)
+    assert not any(is_handle(leaf) for _, leaf in _flat_named(resolved))
+    # decompress_sliced is the legacy alias of resolve
+    alias = decompress_sliced(sliced)
+    for (_, a), (_, b) in zip(_flat_named(resolved), _flat_named(alias)):
+        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                      np.asarray(b).view(np.uint8))
+    # matmul-capable handles pass through untouched
+    fused = assign_weight_modes(params, mode="fused", min_bytes=1024)
+    kept = resolve(jax.tree.map(lambda a: a[0], fused["period"]))
+    assert any(isinstance(leaf, WeightHandle)
+               for _, leaf in _flat_named(kept))
+
+
+def test_abstract_streaming_agrees_with_concrete():
+    """The shared eligibility predicate: every leaf the concrete policy
+    streams must also stream in the abstract (dry-run) tree."""
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    concrete = compress_params_for_streaming(params, min_bytes=1024,
+                                             shards=2)
+    p = EnecParams(b=122, n=6, m=3, L=16, l=96)
+    abstract = abstract_streamed_params(cfg, p, min_bytes=1024, shards=2)
+    conc = {pstr for pstr, leaf in _flat_named(concrete)
+            if isinstance(leaf, StreamedWeight)}
+    abst = {pstr for pstr, leaf in _flat_named(abstract)
+            if isinstance(leaf, StreamedWeight)}
+    assert conc and conc <= abst
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError):
+        assign_weight_modes({}, mode="turbo")

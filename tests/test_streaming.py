@@ -10,7 +10,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.runtime.streaming import (compress_params_for_streaming,
-                                     decompress_sliced, stream_stats)
+                                     stream_stats)
 
 
 @pytest.mark.parametrize("arch,scan", [("qwen3_32b", True),
@@ -25,13 +25,11 @@ def test_streamed_serve_bit_identical(arch, scan):
     B, T = 2, 16
     pb = {"tokens": jax.random.randint(rng, (B, T), 0, cfg.vocab_size)}
     l_ref, c_ref = model.prefill_fn(params, pb, 32)
-    l_str, c_str = model.prefill_fn(streamed, pb, 32,
-                                    decompressor=decompress_sliced)
+    l_str, c_str = model.prefill_fn(streamed, pb, 32)
     assert float(jnp.abs(l_ref - l_str).max()) == 0.0
     tok = jnp.argmax(l_ref, -1).astype(jnp.int32)
     d_ref, _ = model.decode_fn(params, c_ref, tok)
-    d_str, _ = model.decode_fn(streamed, c_str, tok,
-                               decompressor=decompress_sliced)
+    d_str, _ = model.decode_fn(streamed, c_str, tok)
     assert float(jnp.abs(d_ref - d_str).max()) == 0.0
 
 

@@ -11,8 +11,7 @@ from repro.configs import get_smoke_config
 from repro.core import compress_tree, decompress_tree, tree_ratio
 from repro.data.synthetic_weights import PAPER_MODELS, generate
 from repro.models import build_model
-from repro.runtime.streaming import (compress_params_for_streaming,
-                                     decompress_sliced)
+from repro.runtime.streaming import compress_params_for_streaming
 
 
 def test_paper_table2_style_ratios():
@@ -59,13 +58,11 @@ def test_serve_from_compressed_weights_end_to_end():
     rng = jax.random.key(2)
     pb = {"tokens": jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)}
     l_ref, c_ref = model.prefill_fn(params, pb, 24)
-    l_str, c_str = model.prefill_fn(streamed, pb, 24,
-                                    decompressor=decompress_sliced)
+    l_str, c_str = model.prefill_fn(streamed, pb, 24)
     assert float(jnp.abs(l_ref - l_str).max()) == 0.0
     tok = jnp.argmax(l_str, -1).astype(jnp.int32)
     for _ in range(4):
         d_ref, c_ref = model.decode_fn(params, c_ref, tok)
-        d_str, c_str = model.decode_fn(streamed, c_str, tok,
-                                       decompressor=decompress_sliced)
+        d_str, c_str = model.decode_fn(streamed, c_str, tok)
         assert float(jnp.abs(d_ref - d_str).max()) == 0.0
         tok = jnp.argmax(d_str, -1).astype(jnp.int32)
