@@ -1,0 +1,81 @@
+"""ISSUE 3: checkpoint save/load throughput + restore-to-serve wall clock.
+
+Measures the enec-v2 container against the v1-style dense-inflate restore:
+
+  ckpt/save          blocking save() of a {"params", "opt"} training tree
+                     (device-resident compression + threadpool pack writer)
+  ckpt/load          dense training restore (bit-exact, decode on device)
+  ckpt/restore_v1    the dense-inflate serving path the seed had: load()
+                     the dense tree, then re-compress via
+                     assign_weight_modes — the weight bytes cross the host
+                     boundary dense and are encoded a second time
+  ckpt/restore_v2    load_for_serving() on a serving-layout checkpoint:
+                     framed records deserialize straight into weight
+                     handles; only compressed bytes are staged to device
+
+The derived column carries the manifest ratio and the host->device bytes of
+the v2 restore (wire.transfer_stats) — the quantity the paper says decides
+fleet-scale restore time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import wire
+from repro.models import build_model
+from repro.runtime.streaming import assign_weight_modes
+
+
+def _once(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jax.tree.leaves(out)) if out is not None else None
+    return time.perf_counter() - t0, out
+
+
+def run():
+    rows = []
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True, n_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = jax.tree.map(lambda a: jnp.zeros_like(a), params)
+    tree = {"params": params, "opt": {"m": opt}}
+    raw_mb = sum(l.size * l.dtype.itemsize
+                 for l in jax.tree.leaves(tree)) / 1e6
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, serving_layout="fused",
+                                serving_min_bytes=1024)
+        dt, _ = _once(lambda: mgr.save(1, tree, blocking=True))
+        manifest = mgr.manifest()
+        rows.append(("ckpt/save", dt * 1e6,
+                     f"mb_s={raw_mb / dt:.1f};ratio={manifest['ratio']:.3f};"
+                     f"packs={len(manifest['packs'])}"))
+
+        dt, _ = _once(lambda: mgr.load(tree))
+        rows.append(("ckpt/load", dt * 1e6, f"mb_s={raw_mb / dt:.1f}"))
+
+        # v1-style dense-inflate restore-to-serve: dense load + re-compress
+        dt, _ = _once(lambda: assign_weight_modes(
+            mgr.load(tree)[0]["params"], mode="fused", min_bytes=1024))
+        rows.append(("ckpt/restore_v1_dense_inflate", dt * 1e6,
+                     f"s={dt:.3f}"))
+
+        # v2 direct restore: records -> handles, compressed bytes only
+        like = jax.eval_shape(model.init, jax.random.key(0))
+        wire.reset_transfer_stats()
+        dt, _ = _once(lambda: mgr.load_for_serving(
+            like, mode="fused", prefix="params", min_bytes=1024))
+        ts = wire.transfer_stats()
+        rows.append(("ckpt/restore_v2_to_handles", dt * 1e6,
+                     f"s={dt:.3f};h2d_mb={ts['h2d_bytes'] / 1e6:.2f};"
+                     f"dense_mb={raw_mb / 2:.2f}"))
+    return rows

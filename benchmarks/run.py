@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   bench_pipeline    ISSUE 1    (whole-tree compression: per-layer vs stacked)
   bench_e2e         Fig. 10    (TTFT/TPOT dense vs ENEC-streamed + derived)
   bench_serve       ISSUE 2    (TTFT/TPOT/tok-s across weight-execution modes)
+  bench_ckpt        ISSUE 3    (enec-v2 save/load + restore-to-serve wall clock)
 """
 from __future__ import annotations
 
@@ -18,12 +19,12 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_ablation, bench_blocksize, bench_e2e, bench_params,
-                   bench_pipeline, bench_ratio, bench_serve,
+    from . import (bench_ablation, bench_blocksize, bench_ckpt, bench_e2e,
+                   bench_params, bench_pipeline, bench_ratio, bench_serve,
                    bench_throughput, bench_transfer)
     modules = [bench_ratio, bench_throughput, bench_blocksize,
                bench_ablation, bench_params, bench_transfer, bench_pipeline,
-               bench_e2e, bench_serve]
+               bench_e2e, bench_serve, bench_ckpt]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

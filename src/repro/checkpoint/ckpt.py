@@ -1,21 +1,43 @@
-"""ENEC-compressed, fault-tolerant checkpointing.
+"""ENEC-compressed, fault-tolerant checkpointing (enec-v2 container).
 
 Layout (one directory per step):
     <root>/step_000001230/
-        manifest.json          tree structure, shapes, dtypes, ENEC stats
-        t_<idx>.enec           one wire-format blob per tensor leaf
+        manifest.json          tree structure + per-record (pack, offset,
+                               length) index, shapes, dtypes, ENEC stats
+        pack-00000.bin ...     per-shard pack files: concatenated framed
+                               wire records (length + CRC32 per record)
     <root>/LATEST              atomic pointer file (rename-committed)
 
 Properties needed at 1000+ nodes:
-  * atomicity — write to ``.tmp-`` dir, fsync, rename; LATEST updated last;
-    a crash mid-save never corrupts the previous checkpoint;
+  * atomicity — write to ``.tmp-`` dir, fsync every pack AND the manifest
+    AND the directory entries, rename, fsync the parent; LATEST updated
+    last; a crash mid-save never corrupts the previous checkpoint and never
+    commits a step whose manifest is missing or truncated;
   * async     — saves run on a background thread over host copies, training
-    continues (wait() joins before the next save or at exit);
+    continues; a failed async save re-raises from ``wait()`` and from the
+    next ``save()`` instead of vanishing in a daemon thread;
+  * parallel  — records are serialized by a thread pool (``writers``) and
+    streamed round-robin to the per-shard pack files (peak host memory
+    never holds the whole checkpoint);
+  * verified  — every record is framed (explicit length + CRC32), so
+    ``load()`` rejects truncated or bit-flipped records with a clear error
+    instead of silently misdecoding;
+  * partial   — records are indexed by name, so serving restores ONLY the
+    weight records (optimizer state is never read, let alone inflated);
   * elastic   — load() reshards to ANY mesh via device_put with the target
     NamedShardings (topology can shrink/grow between runs);
   * ~1.35x fewer bytes to the storage system via ENEC (per-tensor searched
     params; raw escape keeps incompressible leaves at 1.0x, never worse);
-  * keep-last-k retention + best-effort corruption detection on load.
+  * keep-last-k retention + stale-tmp-dir GC (crashed saves leak nothing).
+
+``serving_layout="stream"|"fused"`` additionally stores every
+policy-eligible weight in its exact *serving* stream layout (the same
+bundles ``runtime.streaming.assign_weight_modes`` would build), which is
+what lets :meth:`CheckpointManager.load_for_serving` deserialize records
+straight into ``StreamedWeight`` / ``FusedWeight`` handles — compressed
+bytes flow disk -> HBM and the dense tensor never exists on the host.
+``load()`` still restores the bit-exact dense training tree from the same
+records (docs/CHECKPOINT.md).
 """
 from __future__ import annotations
 
@@ -25,8 +47,10 @@ import os
 import shutil
 import threading
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,15 +58,45 @@ import numpy as np
 
 from repro.core import api as enec_api
 from repro.core import wire as enec_wire
+from repro.runtime import streaming as rt_streaming
+from repro.runtime.weights import (DenseWeight, handle_from_spec, handle_spec,
+                                   is_handle, materialize_full)
 
 _ENEC_DTYPES = enec_api.SUPPORTED_FLOAT_DTYPES
 
+MANIFEST_FORMAT = "enec-v2"
+
+# tree roots that hold optimizer state under the {"params", "opt"} saving
+# convention: their leaves mirror the weight paths (so the serving-layout
+# eligibility heuristic would match them) but can never be served — they
+# stay plain records instead of paying the tile/moveaxis re-layout
+_NON_SERVING_ROOTS = frozenset({"opt", "opt_state", "optimizer"})
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be saved or restored."""
+
 
 def _tree_paths(tree):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_handle)
     names = ["/".join(str(getattr(k, "key", getattr(k, "name",
              getattr(k, "idx", k)))) for k in path) for path, _ in flat]
     return names, [l for _, l in flat], treedef
+
+
+def _fsync_path(path) -> None:
+    """fsync a file or directory by path (directories need it too: the
+    rename-commit is only durable once the parent's entries are)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _leaf_nbytes(shape, dtype_str: str) -> int:
+    return int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype_str).itemsize
 
 
 @dataclasses.dataclass
@@ -50,122 +104,270 @@ class CheckpointManager:
     root: Path
     keep_last: int = 3
     compress: bool = True
+    writers: int = 4                       # pack shards == writer threads
+    serving_layout: Optional[str] = None   # None | "stream" | "fused"
+    serving_min_bytes: int = rt_streaming.MIN_STREAM_BYTES
+    serving_shards: int = 1
     _thread: Optional[threading.Thread] = None
+    _exc: Optional[BaseException] = None
 
     def __post_init__(self):
         self.root = Path(self.root)
         self.root.mkdir(parents=True, exist_ok=True)
+        if self.serving_layout is not None and \
+                self.serving_layout not in ("stream", "fused"):
+            raise ValueError(
+                f"serving_layout must be None, 'stream' or 'fused', "
+                f"got {self.serving_layout!r}")
 
     # -- save ------------------------------------------------------------
 
     def save(self, step: int, tree, *, blocking: bool = False) -> None:
-        self.wait()
+        self.wait()    # also re-raises a previous async failure
         names, leaves, _ = _tree_paths(tree)
         # compression runs device-resident BEFORE any host transfer: only
         # compressed streams (and the raw non-float leaves) ever cross to the
         # host, and repeated (shape, dtype) float leaves share one stacked
         # encode dispatch (docs/PIPELINE.md)
-        payload = self._prepare(leaves)
+        payload, dense_specs = self._prepare(names, leaves)
         if blocking:
-            self._save_host(step, names, payload)
+            self._save_host(step, names, payload, dense_specs)
             return
         self._thread = threading.Thread(
-            target=self._save_host, args=(step, names, payload), daemon=True)
+            target=self._save_guarded, args=(step, names, payload,
+                                             dense_specs),
+            daemon=True)
         self._thread.start()
 
+    def _save_guarded(self, step, names, payload, dense_specs):
+        try:
+            self._save_host(step, names, payload, dense_specs)
+        except BaseException as e:  # noqa: BLE001 — surfaced via wait()
+            self._exc = e
+
     def wait(self):
+        """Join the in-flight async save.  If it failed, re-raise its
+        exception here (and therefore also from the next ``save()``, which
+        waits first) — an async save error must never report success."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise CheckpointError(
+                f"async checkpoint save failed: {exc}") from exc
 
-    def _prepare(self, leaves):
-        """Per-leaf ("ct", CompressedTensor) or ("np", host array) payload."""
+    def _prepare(self, names, leaves):
+        """Per-leaf record plan:
+             ("np",  host_array)            raw host bytes (non-float)
+             ("ct",  CompressedTensor)      plain enec/raw/const record
+             ("hct", ct, spec, raw_bytes)   stacked serving-layout record
+        """
         payload: list = [None] * len(leaves)
-        float_slots, other_slots = [], []
-        for i, leaf in enumerate(leaves):
+        float_slots, other_slots, serve_jobs = [], [], []
+        dense_specs: dict = {}   # slot -> handle spec for fallback leaves
+        for i, (name, leaf) in enumerate(zip(names, leaves)):
+            if is_handle(leaf):
+                if isinstance(leaf, DenseWeight):
+                    leaf = leaf.w       # stored dense; re-wrapped on restore
+                    dense_specs[i] = {"kind": "dense"}
+                    leaves[i] = leaf
+                else:
+                    spec = handle_spec(leaf)
+                    raw = _leaf_nbytes(
+                        (leaf.ct.streams.mask.shape[0],)
+                        + tuple(spec.get("layer_shape")
+                                or (spec["k"], spec["n"])), spec["dtype"])
+                    payload[i] = ("hct", leaf.ct, spec, raw)
+                    continue
             dt = getattr(leaf, "dtype", None)   # dtype check without a copy
-            if (self.compress and dt is not None
+            if not (self.compress and dt is not None
                     and jnp.dtype(dt) in _ENEC_DTYPES):
-                float_slots.append(i)
-            else:
                 other_slots.append(i)
+                continue
+            if self.serving_layout is not None and i not in dense_specs \
+                    and name.split("/", 1)[0] not in _NON_SERVING_ROOTS:
+                # (slots unwrapped from a DenseWeight stay dense records —
+                # the policy that built the tree already decided against
+                # compressing them)
+                job = rt_streaming.serving_job(name, jnp.asarray(leaf),
+                                               self.serving_layout,
+                                               self.serving_min_bytes)
+                if job is not None:
+                    job["slot"] = i
+                    serve_jobs.append(job)
+                    continue
+            float_slots.append(i)
         if other_slots:   # one batched transfer for all uncompressed leaves
             hosts = jax.device_get([leaves[i] for i in other_slots])
             for i, h in zip(other_slots, hosts):
                 payload[i] = ("np", np.asarray(h))
-        # every float leaf rides the batched pipeline as its own L=1 stack:
-        # per-leaf searched params (ratio parity with the seed — unrelated
-        # same-shape tensors like weights vs Adam moments must NOT share
-        # params), no jnp.stack duplicate on device, while statistics, the
-        # never-worse wire check, and encode dispatches all stay batched —
-        # leaves whose (n, m, L) coincide share one concatenated dispatch
+
+        # serving-layout leaves: compress the exact stream bundles the
+        # weight-execution policy would build (shared serving_job /
+        # build_serving_handle code path), so load_for_serving can
+        # deserialize them straight into handles
+        if serve_jobs:
+            shards = 1 if self.serving_layout == "fused" \
+                else self.serving_shards
+            cts = enec_api.compress_stacked_many(
+                [j["arr"] for j in serve_jobs], shards=shards)
+            for job, ct in zip(serve_jobs, cts):
+                i = job["slot"]
+                handle = rt_streaming.build_serving_handle(job, ct)
+                if is_handle(handle) and not isinstance(handle, DenseWeight):
+                    spec = handle_spec(handle)
+                    payload[i] = ("hct", handle.ct, spec,
+                                  job["leaf"].size * job["leaf"].dtype.itemsize)
+                else:
+                    # const / incompressible escape: plain dense record,
+                    # re-wrapped as DenseWeight by the restore policy
+                    if job["matmul_pos"]:
+                        dense_specs[i] = {"kind": "dense"}
+                    float_slots.append(i)
+
+        # every remaining float leaf rides the batched pipeline as its own
+        # L=1 stack: per-leaf searched params (ratio parity with the seed —
+        # unrelated same-shape tensors like weights vs Adam moments must NOT
+        # share params), no jnp.stack duplicate on device, while statistics,
+        # the never-worse wire check, and encode dispatches all stay batched
+        # — leaves whose (n, m, L) coincide share one concatenated dispatch
         # via the encoder's dynamic-b bucketing.
+        float_slots.sort()
         cts = enec_api.compress_stacked_many(
             [jnp.asarray(leaves[i])[None] for i in float_slots])
         for i, ct in zip(float_slots, cts):
             if ct is None:
                 # const / incompressible / empty: per-leaf escape path.
-                # compress_array repeats the stats pass (and, for the rare
-                # incompressible leaf, the encode) — accepted so the stacked
-                # API keeps its simple Optional contract; const leaves
-                # short-circuit before encoding.
                 payload[i] = ("ct",
                               enec_api.compress_array(jnp.asarray(leaves[i])))
             else:
                 payload[i] = ("ct", enec_api.slice_stacked(ct, 0))
-        return payload
+        return payload, dense_specs
 
-    def _save_host(self, step: int, names, payload) -> None:
+    # -- record building / pack writing ----------------------------------
+
+    def _build_record(self, index, name, item, dense_specs):
+        """(manifest entry sans pack/offset, framed blob bytes)."""
+        tag = item[0]
+        if tag == "np":
+            leaf = item[1]
+            entry = {"name": name, "index": index, "shape": list(leaf.shape),
+                     "dtype": str(leaf.dtype), "mode": "npraw"}
+            blob = b"RAW0" + leaf.tobytes()
+            raw = leaf.nbytes
+        elif tag == "ct":
+            ct = item[1]
+            entry = {"name": name, "index": index, "shape": list(ct.shape),
+                     "dtype": ct.dtype_str, "mode": ct.mode}
+            if ct.params is not None:
+                entry["params"] = list(ct.params.astuple())
+            blob = enec_wire.to_wire(ct)   # moves compressed bytes only
+            raw = ct.nbytes_raw()
+        else:   # "hct": stacked serving-layout record
+            _, ct, spec, raw = item
+            entry = {"name": name, "index": index,
+                     "shape": list(ct.shape), "dtype": ct.dtype_str,
+                     "mode": ct.mode, "handle": spec,
+                     "stack": int(ct.streams.mask.shape[0]),
+                     "params": list(ct.params.astuple())}
+            blob = enec_wire.to_wire(ct, stacked=True)
+        spec = dense_specs.get(index)
+        if spec is not None and "handle" not in entry:
+            entry["handle"] = spec
+        entry["bytes"] = len(blob)
+        return entry, enec_wire.frame(blob), raw
+
+    def _save_host(self, step: int, names, payload, dense_specs) -> None:
         t0 = time.time()
         final = self.root / f"step_{step:012d}"
         tmp = self.root / f".tmp-step_{step:012d}"
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
-        manifest = {"step": step, "leaves": [], "format": "enec-v1"}
+        n_packs = max(1, min(self.writers, len(payload) or 1))
+        manifest = {"format": MANIFEST_FORMAT, "step": step,
+                    "packs": [f"pack-{i:05d}.bin" for i in range(n_packs)],
+                    "leaves": []}
+        if self.serving_layout is not None:
+            manifest["serving_layout"] = {
+                "mode": self.serving_layout,
+                "min_bytes": self.serving_min_bytes,
+                "shards": (1 if self.serving_layout == "fused"
+                           else self.serving_shards)}
         raw_total = comp_total = 0
-        for i, (name, (tag, obj)) in enumerate(zip(names, payload)):
-            blob_path = tmp / f"t_{i:05d}.enec"
-            if tag == "ct":
-                ct = obj
-                entry = {"name": name, "index": i, "shape": list(ct.shape),
-                         "dtype": ct.dtype_str}
-                blob = enec_wire.to_wire(ct)   # moves compressed bytes only
-                entry["mode"] = ct.mode
-                if ct.params is not None:
-                    entry["params"] = list(ct.params.astuple())
-                raw_total += ct.nbytes_raw()
-            else:
-                leaf = obj
-                entry = {"name": name, "index": i, "shape": list(leaf.shape),
-                         "dtype": str(leaf.dtype)}
-                blob = b"RAW0" + leaf.tobytes()
-                entry["mode"] = "npraw"
-                raw_total += leaf.nbytes
-            comp_total += len(blob)
-            entry["bytes"] = len(blob)
-            with open(blob_path, "wb") as f:
-                f.write(blob)
+        offsets = [0] * n_packs
+        # records are serialized by the thread pool and STREAMED round-robin
+        # to the pack shards; submission is bounded (a sliding window of
+        # in-flight builds), so peak host memory holds a few frames — never
+        # the whole checkpoint — even when the filesystem writes slowly
+        files = [open(tmp / name, "wb") for name in manifest["packs"]]
+        workers = max(self.writers, 1)
+        pending: deque = deque()
+
+        def drain_one():
+            nonlocal raw_total, comp_total
+            i, fut = pending.popleft()
+            entry, framed, raw = fut.result()
+            pack = i % n_packs
+            entry["pack"] = pack
+            entry["offset"] = offsets[pack]
+            entry["length"] = len(framed)
+            offsets[pack] += len(framed)
+            files[pack].write(framed)
+            raw_total += raw
+            comp_total += entry["bytes"]
+            manifest["leaves"].append(entry)
+
+        try:
+            with ThreadPoolExecutor(max_workers=workers) as ex:
+                for i, (n, it) in enumerate(zip(names, payload)):
+                    pending.append((i, ex.submit(
+                        self._build_record, i, n, it, dense_specs)))
+                    if len(pending) >= 2 * workers:
+                        drain_one()
+                while pending:
+                    drain_one()
+            for f in files:
                 f.flush()
                 os.fsync(f.fileno())
-            manifest["leaves"].append(entry)
+        finally:
+            for f in files:
+                f.close()
+
         manifest["raw_bytes"] = raw_total
         manifest["compressed_bytes"] = comp_total
         manifest["ratio"] = raw_total / max(comp_total, 1)
         manifest["save_s"] = round(time.time() - t0, 3)
-        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        # fsync the manifest AND the tmp directory entries BEFORE the
+        # rename: otherwise a crash can commit a step directory whose
+        # manifest is missing or truncated
+        with open(tmp / "manifest.json", "w") as f:
+            f.write(json.dumps(manifest, indent=1))
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_path(tmp)
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)                       # atomic commit
+        _fsync_path(self.root)                  # …made durable
         latest_tmp = self.root / ".LATEST.tmp"
-        latest_tmp.write_text(final.name)
+        with open(latest_tmp, "w") as f:
+            f.write(final.name)
+            f.flush()
+            os.fsync(f.fileno())
         latest_tmp.rename(self.root / "LATEST")
+        _fsync_path(self.root)
         self._gc()
 
     def _gc(self):
         steps = sorted(p for p in self.root.glob("step_*") if p.is_dir())
         for old in steps[: max(0, len(steps) - self.keep_last)]:
             shutil.rmtree(old, ignore_errors=True)
+        # stale tmp dirs from crashed saves would otherwise leak forever
+        # (our own tmp has already been renamed away by the time GC runs)
+        for stale in self.root.glob(".tmp-step_*"):
+            shutil.rmtree(stale, ignore_errors=True)
 
     # -- load ------------------------------------------------------------
 
@@ -175,34 +377,207 @@ class CheckpointManager:
             return None
         return int(ptr.read_text().strip().split("_")[-1])
 
-    def load(self, like_tree, step: Optional[int] = None,
-             shardings=None):
-        """Restore into the structure of ``like_tree``; reshard to
-        ``shardings`` (elastic: any mesh) or keep host arrays."""
+    def manifest(self, step: Optional[int] = None) -> dict:
+        """The manifest of ``step`` (default: latest) without reading any
+        record bytes — launchers use it to sniff the name prefix and the
+        stored serving layout."""
+        return self._step_dir(step)[1]
+
+    def _step_dir(self, step: Optional[int]) -> tuple:
         if step is None:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoint under {self.root}")
         cdir = self.root / f"step_{step:012d}"
-        manifest = json.loads((cdir / "manifest.json").read_text())
+        manifest_path = cdir / "manifest.json"
+        if not manifest_path.exists():
+            raise CheckpointError(f"{cdir} has no manifest.json")
+        try:
+            return cdir, json.loads(manifest_path.read_text())
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CheckpointError(
+                f"{manifest_path} is corrupt: {e}") from e
+
+    @staticmethod
+    def _require_records(names, by_name, cdir, what="records"):
+        missing = [n for n in names if n not in by_name]
+        if missing:
+            raise CheckpointError(
+                f"checkpoint {cdir.name} lacks {what} for {missing[:5]}"
+                + ("…" if len(missing) > 5 else ""))
+
+    @staticmethod
+    def _check_leaf(name, shape, like, dtype=None):
+        if tuple(shape) != tuple(like.shape):
+            raise CheckpointError(f"{name}: ckpt {tuple(shape)} vs model "
+                                  f"{tuple(like.shape)}")
+        if dtype is not None and dtype != str(jnp.dtype(like.dtype)):
+            raise CheckpointError(f"{name}: ckpt dtype {dtype} vs model "
+                                  f"{jnp.dtype(like.dtype)}")
+
+    def _iter_records(self, cdir, manifest, entries):
+        """Yield ``(entry, payload_bytes)`` for ``entries``, validated
+        (frame length + CRC for v2 packs; declared blob size for v1
+        per-leaf files), one record at a time in pack/offset order — the
+        caller decodes as it goes, so peak host memory holds one record's
+        compressed bytes, never the whole checkpoint.  Only the requested
+        records are read (partial load never touches the rest of the
+        pack)."""
+        fmt = manifest.get("format", "enec-v1")
+        if fmt == "enec-v1":
+            for e in entries:
+                path = cdir / f"t_{e['index']:05d}.enec"
+                blob = path.read_bytes()
+                if "bytes" in e and len(blob) != e["bytes"]:
+                    raise CheckpointError(
+                        f"{path.name}: {len(blob)} bytes on disk, manifest "
+                        f"declares {e['bytes']} — truncated or corrupt")
+                yield e, blob
+            return
+        if fmt != MANIFEST_FORMAT:
+            raise CheckpointError(f"unknown checkpoint format {fmt!r}")
+        by_pack: dict = {}
+        for e in entries:
+            by_pack.setdefault(e["pack"], []).append(e)
+        for pack, es in sorted(by_pack.items()):
+            path = cdir / manifest["packs"][pack]
+            with open(path, "rb") as f:
+                for e in sorted(es, key=lambda e: e["offset"]):
+                    f.seek(e["offset"])
+                    buf = f.read(e["length"])
+                    try:
+                        payload, end = enec_wire.read_frame(buf)
+                    except enec_wire.WireError as err:
+                        raise CheckpointError(
+                            f"{path.name} @ {e['offset']} ({e['name']}): "
+                            f"{err}") from err
+                    if end != len(buf):
+                        raise CheckpointError(
+                            f"{path.name} @ {e['offset']} ({e['name']}): "
+                            f"frame length {end} != indexed {len(buf)}")
+                    yield e, payload
+
+    @staticmethod
+    def _decode_npraw(e, blob):
+        blob = bytes(blob)
+        if blob[:4] != b"RAW0":
+            raise CheckpointError(f"corrupt raw blob for {e['name']}")
+        arr = np.frombuffer(blob[4:], dtype=np.dtype(e["dtype"]))
+        if arr.size != int(np.prod(e["shape"], dtype=np.int64)):
+            raise CheckpointError(
+                f"{e['name']}: raw payload holds {arr.size} elements, "
+                f"manifest declares shape {e['shape']}")
+        return enec_wire.h2d(arr.reshape(e["shape"]))
+
+    def _decode_dense(self, e, blob):
+        """One record -> dense value, decompressed ON DEVICE (compressed
+        bytes are the only thing that crosses the host->device link)."""
+        if e["mode"] == "npraw":
+            return self._decode_npraw(e, blob)
+        try:
+            ct = enec_wire.from_wire(blob)
+        except enec_wire.WireError as err:
+            raise CheckpointError(f"{e['name']}: {err}") from err
+        if "handle" in e and e.get("stack"):
+            # serving-layout record: rebuild the handle, then materialize
+            # the whole stack (one decode dispatch) back to the dense leaf
+            return materialize_full(handle_from_spec(e["handle"], ct))
+        return enec_api.decompress_on_device(ct)
+
+    def load(self, like_tree, step: Optional[int] = None,
+             shardings=None):
+        """Restore into the structure of ``like_tree``; reshard to
+        ``shardings`` (elastic: any mesh) or keep host arrays."""
+        cdir, manifest = self._step_dir(step)
         names, leaves, treedef = _tree_paths(like_tree)
         by_name = {e["name"]: e for e in manifest["leaves"]}
-        out = []
-        for name, like in zip(names, leaves):
-            e = by_name[name]
-            blob = (cdir / f"t_{e['index']:05d}.enec").read_bytes()
-            if e["mode"] == "npraw":
-                assert blob[:4] == b"RAW0", f"corrupt blob for {name}"
-                arr = np.frombuffer(blob[4:], dtype=np.dtype(e["dtype"]))
-                arr = arr.reshape(e["shape"])
-                val = jax.numpy.asarray(arr)
-            else:
-                ct = enec_wire.from_wire(blob)
-                val = enec_api.decompress_array(ct)
-            assert tuple(val.shape) == tuple(like.shape), \
-                f"{name}: ckpt {val.shape} vs model {like.shape}"
-            out.append(val.astype(like.dtype))
-        tree = jax.tree_util.tree_unflatten(treedef, out)
+        self._require_records(names, by_name, cdir)
+        like_by_name = dict(zip(names, leaves))
+        vals = {}
+        for e, payload in self._iter_records(cdir, manifest,
+                                             [by_name[n] for n in names]):
+            name, like = e["name"], like_by_name[e["name"]]
+            val = self._decode_dense(e, payload)
+            self._check_leaf(name, val.shape, like)
+            vals[name] = val.astype(like.dtype)
+        tree = jax.tree_util.tree_unflatten(treedef,
+                                            [vals.pop(n) for n in names])
         if shardings is not None:
             tree = jax.device_put(tree, shardings)
+        return tree, manifest
+
+    # -- restore straight into serving handles ----------------------------
+
+    @staticmethod
+    def _spec_serves_mode(spec: dict, mode: str) -> bool:
+        """Can a stored serving-layout record be adopted as-is under the
+        requested weight-execution mode?"""
+        kind = spec.get("kind")
+        if mode == "fused":
+            return kind == "fused" or (
+                kind == "stream"
+                and spec.get("execution", "materialize") == "materialize")
+        if mode == "stream":
+            return kind == "stream"
+        return False
+
+    def load_for_serving(self, like_params, *, mode: str = "fused",
+                         step: Optional[int] = None, prefix: str = "",
+                         min_bytes: int = rt_streaming.MIN_STREAM_BYTES,
+                         shards: int = rt_streaming.STREAM_SHARDS):
+        """Restore ONLY the weight records into a serving handle tree.
+
+        ``like_params`` is the (dense) params structure — ShapeDtypeStructs
+        are fine, nothing is allocated from it.  ``prefix`` namespaces the
+        record names ("params" when the checkpoint was saved as
+        ``{"params": ..., "opt": ...}``); optimizer records are never read.
+
+        Records stored in a matching serving layout deserialize DIRECTLY
+        into ``StreamedWeight`` / ``FusedWeight`` handles — disk -> HBM with
+        no dense tensor on the host (``wire.transfer_stats()`` proves it).
+        Everything else (plain v1/v2 records, or a layout mismatch) is
+        decompressed on device and handed to ``assign_weight_modes``, which
+        passes existing handles through untouched.
+        """
+        if mode not in rt_streaming.WEIGHT_MODES:
+            raise ValueError(f"unknown weight mode {mode!r}")
+        cdir, manifest = self._step_dir(step)
+        names, leaves, treedef = _tree_paths(like_params)
+        full = [f"{prefix}/{n}" if prefix else n for n in names]
+        by_name = {e["name"]: e for e in manifest["leaves"]}
+        self._require_records(full, by_name, cdir, what="weight records")
+        like_by_name = dict(zip(full, leaves))
+        vals = {}
+        for e, payload in self._iter_records(cdir, manifest,
+                                             [by_name[n] for n in full]):
+            name, like = e["name"], like_by_name[e["name"]]
+            spec = e.get("handle")
+            if spec and spec["kind"] != "dense" and e.get("stack") \
+                    and mode != "dense" and self._spec_serves_mode(spec, mode):
+                leaf_shape = (int(e["stack"]),) + (
+                    tuple(spec["layer_shape"]) if spec["kind"] == "stream"
+                    else (int(spec["k"]), int(spec["n"])))
+                self._check_leaf(name, leaf_shape, like, dtype=spec["dtype"])
+                try:
+                    ct = enec_wire.from_wire(payload)
+                except enec_wire.WireError as err:
+                    raise CheckpointError(f"{name}: {err}") from err
+                # adopt only when the stored stream layout matches the
+                # requested TP width (fused mode forces shards=1) — a
+                # mismatch falls through to the device re-layout below
+                # instead of silently keeping the checkpoint's sharding
+                req_shards = 1 if mode == "fused" else shards
+                if ct.shards == req_shards:
+                    vals[name] = handle_from_spec(spec, ct)
+                    continue
+                val = materialize_full(handle_from_spec(spec, ct))
+                vals[name] = val.astype(like.dtype)
+                continue
+            val = self._decode_dense(e, payload)
+            self._check_leaf(name, val.shape, like)
+            vals[name] = val.astype(like.dtype)
+        tree = jax.tree_util.tree_unflatten(treedef,
+                                            [vals.pop(n) for n in full])
+        tree = rt_streaming.assign_weight_modes(
+            tree, mode=mode, min_bytes=min_bytes, shards=shards)
         return tree, manifest

@@ -445,6 +445,16 @@ def slice_stacked(ct: CompressedTensor, index: int) -> CompressedTensor:
         ct, streams=jax.tree.map(lambda a: a[index], ct.streams))
 
 
+# jit'd entry points for the checkpoint-restore path: CompressedTensor is a
+# pytree whose codec metadata is static, so jax.jit specializes one compiled
+# decode per (fmt, params, shape) — restoring a 2N-layer model decompresses
+# through a handful of compiled programs instead of thousands of eager
+# dispatches, and the decode runs where the streams live (device), never on
+# the host.
+decompress_on_device = jax.jit(decompress_array)
+decompress_stacked_on_device = jax.jit(decompress_stacked)
+
+
 # ---------------------------------------------------------------------------
 # tile-wise compression for the fused decompress+matmul kernel
 # ---------------------------------------------------------------------------

@@ -9,7 +9,10 @@ every lane is emitted ("byte normalization") and the overflow recurses.
 
 All functions operate on the LAST axis and broadcast over leading batch
 dimensions, and all shapes/offsets are static functions of ``(N, width)``
-— the whole codec is jit/pallas friendly.
+— the whole codec is jit/pallas friendly.  The fixed-width pack/unpack pair
+also accepts ``xp=numpy`` so the checkpoint/wire path can convert between
+the exact and padded layouts entirely on the host (no device round-trip on
+save/load).
 
 Widths up to 32 are supported by peeling whole byte planes first and
 running the halving fold on the sub-byte residue (the paper's Alg. 2 covers
@@ -24,8 +27,8 @@ import numpy as np
 __all__ = ["pack_fixed", "unpack_fixed", "packed_nbytes"]
 
 
-def _mask(width: int, dtype):
-    return jnp.asarray((1 << width) - 1, dtype)
+def _mask(width: int, dtype, xp=jnp):
+    return xp.asarray((1 << width) - 1, dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -41,7 +44,7 @@ def _fold_plan(a: int, n: int):
     return width, length
 
 
-def _halving_pack(vals, a: int):
+def _halving_pack(vals, a: int, xp=jnp):
     """vals: (..., N) uint16 lanes each < 2**a, 1 <= a < 8, N power of two.
 
     Returns a list of uint8 byte-plane arrays (concatenated by the caller).
@@ -61,10 +64,10 @@ def _halving_pack(vals, a: int):
     if residual_width == 0:
         return [emitted]
     residual = (vals >> 8).astype(jnp.uint16)
-    return [emitted] + _halving_pack(residual, residual_width)
+    return [emitted] + _halving_pack(residual, residual_width, xp)
 
 
-def _halving_unpack(stream, offset: int, a: int, n: int):
+def _halving_unpack(stream, offset: int, a: int, n: int, xp=jnp):
     """Inverse of :func:`_halving_pack`. Returns (vals (..., N) uint16, offset)."""
     width, length = _fold_plan(a, n)
     if width < 8:
@@ -75,15 +78,16 @@ def _halving_unpack(stream, offset: int, a: int, n: int):
         offset += length
         residual_width = width - 8
         if residual_width:
-            residual, offset = _halving_unpack(stream, offset, residual_width, length)
+            residual, offset = _halving_unpack(stream, offset, residual_width,
+                                               length, xp)
             vals = emitted | (residual << 8)
         else:
             vals = emitted
     while width > a:
         w2 = width // 2
-        lo = vals & _mask(w2, vals.dtype)
+        lo = vals & _mask(w2, vals.dtype, xp)
         hi = vals >> w2
-        vals = jnp.concatenate([lo, hi], axis=-1)
+        vals = xp.concatenate([lo, hi], axis=-1)
         width = w2
         length *= 2
     return vals, offset
@@ -114,38 +118,39 @@ def packed_nbytes(n: int, width: int) -> int:
     return total
 
 
-def pack_fixed(vals, width: int):
+def pack_fixed(vals, width: int, xp=jnp):
     """Pack (..., N) unsigned lanes of ``width`` significant bits into uint8.
 
     N must be a power of two (pad upstream).  Output shape:
-    (..., packed_nbytes(N, width)).
+    (..., packed_nbytes(N, width)).  ``xp=numpy`` runs the identical layout
+    on the host (wire/checkpoint path).
     """
-    vals = jnp.asarray(vals)
+    vals = xp.asarray(vals)
     n = vals.shape[-1]
     assert n & (n - 1) == 0, f"lane count must be a power of two, got {n}"
     if width == 0:
-        return jnp.zeros(vals.shape[:-1] + (0,), jnp.uint8)
+        return xp.zeros(vals.shape[:-1] + (0,), jnp.uint8)
     planes = []
     w = width
     while w >= 8:
-        planes.append((vals & _mask(8, vals.dtype)).astype(jnp.uint8))
+        planes.append((vals & _mask(8, vals.dtype, xp)).astype(jnp.uint8))
         vals = vals >> 8
         w -= 8
     if w:
-        sub = (vals & _mask(w, vals.dtype)).astype(jnp.uint16)
-        planes.extend(_halving_pack(sub, w))
-    return jnp.concatenate(planes, axis=-1)
+        sub = (vals & _mask(w, vals.dtype, xp)).astype(jnp.uint16)
+        planes.extend(_halving_pack(sub, w, xp))
+    return xp.concatenate(planes, axis=-1)
 
 
-def unpack_fixed(stream, n: int, width: int, out_dtype=jnp.uint16):
+def unpack_fixed(stream, n: int, width: int, out_dtype=jnp.uint16, xp=jnp):
     """Inverse of :func:`pack_fixed`.
 
     stream: (..., packed_nbytes(n, width)) uint8 -> (..., n) ``out_dtype``.
     """
-    stream = jnp.asarray(stream, jnp.uint8)
+    stream = xp.asarray(stream, jnp.uint8)
     if width == 0:
-        return jnp.zeros(stream.shape[:-1] + (n,), out_dtype)
-    vals = jnp.zeros(stream.shape[:-1] + (n,), out_dtype)
+        return xp.zeros(stream.shape[:-1] + (n,), out_dtype)
+    vals = xp.zeros(stream.shape[:-1] + (n,), out_dtype)
     offset = 0
     shift = 0
     w = width
@@ -156,7 +161,7 @@ def unpack_fixed(stream, n: int, width: int, out_dtype=jnp.uint16):
         shift += 8
         w -= 8
     if w:
-        sub, offset = _halving_unpack(stream, offset, w, n)
+        sub, offset = _halving_unpack(stream, offset, w, n, xp)
         vals = vals | (sub.astype(out_dtype) << shift)
     return vals
 
@@ -212,9 +217,19 @@ def np_pack_bits_exact(vals: np.ndarray, width: int) -> bytes:
 
 
 def np_unpack_bits_exact(buf: bytes, count: int, width: int) -> np.ndarray:
-    """Host-only inverse of :func:`np_pack_bits_exact`."""
+    """Host-only inverse of :func:`np_pack_bits_exact`.
+
+    Raises ``ValueError`` when ``buf`` is shorter than the ``count * width``
+    bits it claims to hold (a truncated wire record must fail loudly, not
+    read out of bounds or silently return zeros).
+    """
     if width == 0 or count == 0:
         return np.zeros(count, np.uint32)
+    need = (count * width + 7) // 8
+    if len(buf) < need:
+        raise ValueError(
+            f"bit stream truncated: need {need} bytes for {count} lanes of "
+            f"{width} bits, got {len(buf)}")
     raw = np.frombuffer(buf, np.uint8)
     vals = np.zeros(count, np.uint64)
     bitpos = np.arange(count, dtype=np.uint64) * np.uint64(width)

@@ -5,20 +5,41 @@ sees fixed shapes; the wire layout stores the *exact* bits (the paper's
 file-based accounting).  This module converts between the two.  numpy only —
 it runs on the checkpoint/host path, never inside jit.
 
-Layout per tensor (little endian):
+Record layout per tensor (little endian, "enec-v1"-compatible inner body):
   magic  u32 = 0xE47C0DEC
-  mode   u8 (0=enec, 1=raw), fmt u8, reserved u16
+  mode   u8 (0=enec, 1=raw, 2=const), fmt u8, stack u16 (0 = plain record;
+         else the leading layer-stack length L of every stream)
   ndim u32, shape i64[ndim], dtype tag u8[8]
   block_elems u32, shards u32
   params: b i32, n i32, m i32, L i32, l i32  (enec mode)
-  nblocks u32
+  nblocks u32                      (TOTAL flat blocks: stack * shards * B)
   high_len u32[nblocks]            (bits)
   mask | low | raw                 (fixed-size streams, concatenated)
   high                             (exact bit stream, byte padded per block)
+
+enec-v2 frame (the self-delimiting container unit): records are wrapped in
+
+  frame_magic u32 = 0xE47C0DF2
+  version u16 = 2, flags u16 (reserved, must be 0)
+  payload_len u64
+  payload_crc u32                  (CRC32 of the payload bytes)
+  payload bytes
+
+so frames can be concatenated into per-shard pack files, located by
+(offset, length) from a manifest, and validated (length bounds + CRC) on
+read.  The seed's raw/const records read to end-of-buffer and therefore
+could not be framed at all; with the explicit ``payload_len`` every record
+is parsed from an exact slice and any truncation or bit flip is rejected
+with :class:`WireError` instead of being silently misdecoded.
+
+All host->device uploads made while deserializing go through a transfer
+counter (:func:`transfer_stats`) — the serving-restore path asserts that
+only *compressed* bytes ever cross to the device.
 """
 from __future__ import annotations
 
 import struct
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -33,25 +54,140 @@ from .params import EnecParams
 MAGIC = 0xE47C0DEC
 _FMT_TAGS = {"bf16": 0, "fp16": 1, "fp32": 2}
 _FMT_FROM_TAG = {v: k for k, v in _FMT_TAGS.items()}
+_MODE_TAGS = {"enec": 0, "raw": 1, "const": 2}
+_MODE_FROM_TAG = {v: k for k, v in _MODE_TAGS.items()}
 
+
+class WireError(ValueError):
+    """A wire record or frame failed validation (truncated, corrupt, or not
+    an ENEC record at all)."""
+
+
+# ---------------------------------------------------------------------------
+# host<->device transfer accounting
+# ---------------------------------------------------------------------------
+
+_transfer = {"h2d_bytes": 0, "h2d_arrays": 0}
+
+
+def reset_transfer_stats() -> None:
+    for k in _transfer:
+        _transfer[k] = 0
+
+
+def transfer_stats() -> dict:
+    """Bytes staged host->device by wire deserialization (and the checkpoint
+    loader's raw-leaf uploads).  The compressed-restore acceptance test uses
+    this to prove no dense weight ever crossed the host->device link."""
+    return dict(_transfer)
+
+
+def h2d(arr):
+    """Upload one host array to the default device, counting its bytes."""
+    arr = np.asarray(arr)
+    _transfer["h2d_bytes"] += arr.nbytes
+    _transfer["h2d_arrays"] += 1
+    return jnp.asarray(arr)
+
+
+# ---------------------------------------------------------------------------
+# enec-v2 framing: self-delimiting, CRC-checked record container
+# ---------------------------------------------------------------------------
+
+FRAME_MAGIC = 0xE47C0DF2
+FRAME_VERSION = 2
+_FRAME_HDR = struct.Struct("<IHHQI")   # magic, version, flags, len, crc
+FRAME_HEADER_BYTES = _FRAME_HDR.size
+
+
+def frame(payload: bytes) -> bytes:
+    """Wrap one record payload in a self-delimiting, CRC-checked frame."""
+    return _FRAME_HDR.pack(FRAME_MAGIC, FRAME_VERSION, 0, len(payload),
+                           zlib.crc32(payload)) + payload
+
+
+def framed_nbytes(payload_len: int) -> int:
+    return FRAME_HEADER_BYTES + payload_len
+
+
+def read_frame(buf, off: int = 0):
+    """Validate and return ``(payload, next_off)`` for the frame at ``off``.
+
+    Checks magic, version, that the declared payload length fits the buffer,
+    and the payload CRC32.  Raises :class:`WireError` on any mismatch — a
+    truncated pack file or a flipped bit can never be silently decoded.
+    """
+    view = memoryview(buf)
+    if off + FRAME_HEADER_BYTES > len(view):
+        raise WireError(
+            f"frame header truncated at offset {off}: need "
+            f"{FRAME_HEADER_BYTES} bytes, have {len(view) - off}")
+    magic, version, flags, length, crc = _FRAME_HDR.unpack_from(view, off)
+    if magic != FRAME_MAGIC:
+        raise WireError(f"bad frame magic {magic:#x} at offset {off} "
+                        f"(expected {FRAME_MAGIC:#x})")
+    if version != FRAME_VERSION:
+        raise WireError(f"unsupported frame version {version} at offset {off}")
+    if flags != 0:
+        raise WireError(f"unknown frame flags {flags:#x} at offset {off}")
+    start = off + FRAME_HEADER_BYTES
+    if start + length > len(view):
+        raise WireError(
+            f"frame payload truncated at offset {off}: declares {length} "
+            f"bytes, only {len(view) - start} available")
+    payload = view[start : start + length]
+    got = zlib.crc32(payload)
+    if got != crc:
+        raise WireError(
+            f"frame CRC mismatch at offset {off}: stored {crc:#010x}, "
+            f"computed {got:#010x} — record is corrupt")
+    return payload, start + length
+
+
+def iter_frames(buf):
+    """Yield ``(offset, payload)`` for every frame in a concatenated pack."""
+    off = 0
+    view = memoryview(buf)
+    while off < len(view):
+        start = off
+        payload, off = read_frame(view, off)
+        yield start, payload
+
+
+# ---------------------------------------------------------------------------
+# record serialization
+# ---------------------------------------------------------------------------
 
 def _flat_streams(ct: CompressedTensor) -> BlockStreams:
-    s = ct.streams
-    if ct.shards > 1:
-        s = jax.tree.map(
-            lambda a: np.asarray(jax.device_get(a)).reshape(
-                (a.shape[0] * a.shape[1],) + a.shape[2:]), s)
-    else:
-        s = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), s)
-    return s
+    """Host copies of the streams with every leading (stack/shard) dim
+    flattened into the block dim."""
+    s = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), ct.streams)
+    rows = int(np.prod(s.mask.shape[:-1], dtype=np.int64))
+    return BlockStreams(
+        mask=s.mask.reshape(rows, s.mask.shape[-1]),
+        low=s.low.reshape(rows, s.low.shape[-1]),
+        high=s.high.reshape(rows, s.high.shape[-1]),
+        high_len=s.high_len.reshape(rows),
+        raw=s.raw.reshape(rows, s.raw.shape[-1]))
 
 
-_MODE_TAGS = {"enec": 0, "raw": 1, "const": 2}
+def to_wire(ct: CompressedTensor, *, stacked: bool = False) -> bytes:
+    """Serialize one tensor (or one stacked ``(L, ...)`` stream bundle).
 
-
-def to_wire(ct: CompressedTensor) -> bytes:
+    ``stacked=True`` records the leading layer-stack dim of the streams in
+    the header so :func:`from_wire` can restore the exact ``(L[, S], B)``
+    layout — this is how serving handles' stream bundles hit the disk
+    without being re-laid-out.
+    """
+    stack = 0
+    if stacked:
+        if ct.mode != "enec":
+            raise WireError("only enec-mode tensors can be stacked on wire")
+        stack = int(ct.streams.mask.shape[0])
+        if not 0 < stack <= 0xFFFF:
+            raise WireError(f"stack length {stack} out of range")
     out = [struct.pack("<IBBH", MAGIC, _MODE_TAGS[ct.mode],
-                       _FMT_TAGS[ct.fmt_name], 0)]
+                       _FMT_TAGS[ct.fmt_name], stack)]
     out.append(struct.pack("<I", len(ct.shape)))
     out.append(np.asarray(ct.shape, np.int64).tobytes())
     out.append(struct.pack("<8s", ct.dtype_str.encode()[:8]))
@@ -70,74 +206,159 @@ def to_wire(ct: CompressedTensor) -> bytes:
     out.append(s.low.tobytes())
     out.append(s.raw.tobytes())
     # exact high stream: per block, unpack the padded device form and re-pack
-    # only the true values with straight bit concatenation
+    # only the true values with straight bit concatenation — entirely on the
+    # host (bitio's xp=np path), no device round-trip on the save path
     width = p.n - p.m
     if width:
-        n_elems = ct.block_elems
-        dense = np.asarray(
-            jax.device_get(bitio.unpack_fixed(jnp.asarray(s.high), n_elems, width)))
+        dense = bitio.unpack_fixed(s.high, ct.block_elems, width, xp=np)
         for blk in range(nblocks):
             count = int(s.high_len[blk]) // width
             out.append(bitio.np_pack_bits_exact(dense[blk, :count], width))
     return b"".join(out)
 
 
-def from_wire(buf: bytes) -> CompressedTensor:
+def _expected_raw_nbytes(mode: str, shape, dtype_str: str) -> int:
+    if mode == "const":
+        return jnp.dtype(dtype_str).itemsize
+    return int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype_str).itemsize
+
+
+def from_wire(buf) -> CompressedTensor:
+    """Parse one record from an EXACT buffer slice (a framed payload or a
+    whole v1 blob file).  Every field is validated; short buffers, trailing
+    garbage, unknown tags and impossible stream lengths raise
+    :class:`WireError`.  Streams are uploaded through :func:`h2d`, so the
+    transfer counter sees exactly the compressed bytes.
+    """
+    view = memoryview(buf)
+    total = len(view)
     off = 0
-    magic, mode, fmt_tag, _ = struct.unpack_from("<IBBH", buf, off); off += 8
-    assert magic == MAGIC, "bad ENEC wire magic"
-    (ndim,) = struct.unpack_from("<I", buf, off); off += 4
-    shape = tuple(np.frombuffer(buf, np.int64, ndim, off).tolist()); off += 8 * ndim
-    (dtype_raw,) = struct.unpack_from("<8s", buf, off); off += 8
-    dtype_str = dtype_raw.rstrip(b"\x00").decode()
-    block_elems, shards = struct.unpack_from("<II", buf, off); off += 8
-    if mode in (1, 2):
-        raw = jnp.asarray(np.frombuffer(buf, np.uint8, -1, off))
+    try:
+        magic, mode_tag, fmt_tag, stack = struct.unpack_from("<IBBH", view, off)
+        off += 8
+        if magic != MAGIC:
+            raise WireError(f"bad ENEC wire magic {magic:#x}")
+        if mode_tag not in _MODE_FROM_TAG:
+            raise WireError(f"unknown mode tag {mode_tag}")
+        mode = _MODE_FROM_TAG[mode_tag]
+        (ndim,) = struct.unpack_from("<I", view, off); off += 4
+        if ndim > 16:
+            raise WireError(f"implausible ndim {ndim}")
+        if off + 8 * ndim > total:
+            raise WireError(f"record truncated in the {ndim}-dim shape")
+        shape = tuple(np.frombuffer(view, np.int64, ndim, off).tolist())
+        off += 8 * ndim
+        (dtype_raw,) = struct.unpack_from("<8s", view, off); off += 8
+        dtype_str = bytes(dtype_raw).rstrip(b"\x00").decode()
+        jnp.dtype(dtype_str)   # must name a real dtype
+        block_elems, shards = struct.unpack_from("<II", view, off); off += 8
+    except (struct.error, UnicodeDecodeError, TypeError) as e:
+        raise WireError(f"corrupt record header: {e}") from None
+
+    if mode in ("raw", "const"):
+        raw = np.frombuffer(view, np.uint8, -1, off)
+        expect = _expected_raw_nbytes(mode, shape, dtype_str)
+        if raw.nbytes != expect:
+            raise WireError(
+                f"{mode} record carries {raw.nbytes} payload bytes, "
+                f"expected {expect} for shape {shape} dtype {dtype_str}")
         return CompressedTensor(
-            streams=None, raw_bytes=raw,
+            streams=None, raw_bytes=h2d(raw),
             fmt_name=_FMT_FROM_TAG.get(fmt_tag, "bf16"), params=None,
             shape=shape, dtype_str=dtype_str, block_elems=block_elems,
-            shards=shards, mode="raw" if mode == 1 else "const")
+            shards=shards, mode=mode)
 
+    if fmt_tag not in _FMT_FROM_TAG:
+        raise WireError(f"unknown float format tag {fmt_tag}")
     fmt = FORMATS[_FMT_FROM_TAG[fmt_tag]]
-    b, n, m, L, l = struct.unpack_from("<5i", buf, off); off += 20
+    try:
+        b, n, m, L, l = struct.unpack_from("<5i", view, off); off += 20
+        (nblocks,) = struct.unpack_from("<I", view, off); off += 4
+    except struct.error as e:
+        raise WireError(f"record truncated in params: {e}") from None
     p = EnecParams(b=b, n=n, m=m, L=L, l=l)
-    (nblocks,) = struct.unpack_from("<I", buf, off); off += 4
-    high_len = np.frombuffer(buf, np.uint32, nblocks, off).astype(np.int32)
-    off += 4 * nblocks
-    widths = codec.stream_shapes(block_elems, fmt, p)
+    if not (0 <= m <= n <= 32 and L >= 1 and block_elems >= 1):
+        raise WireError(f"implausible params {p.astuple()} "
+                        f"block_elems={block_elems}")
+    if shards < 1 or nblocks % (max(stack, 1) * shards):
+        raise WireError(f"nblocks={nblocks} not divisible by "
+                        f"stack={stack} * shards={shards} — corrupt header")
 
-    def take(nb):
+    def take(nb, what):
         nonlocal off
-        arr = np.frombuffer(buf, np.uint8, nblocks * nb, off).reshape(nblocks, nb)
-        off += nblocks * nb
+        need = nblocks * nb
+        if off + need > total:
+            raise WireError(
+                f"{what} stream truncated: need {need} bytes at offset "
+                f"{off}, record has {total - off} left")
+        arr = np.frombuffer(view, np.uint8, need, off).reshape(nblocks, nb)
+        off += need
         return arr
 
-    mask = take(widths["mask"])
-    low = take(widths["low"])
-    raw = take(widths["raw"])
+    if off + 4 * nblocks > total:
+        raise WireError("high_len vector truncated")
+    high_len = np.frombuffer(view, np.uint32, nblocks, off).astype(np.int32)
+    off += 4 * nblocks
+    widths = codec.stream_shapes(block_elems, fmt, p)
+    mask = take(widths["mask"], "mask")
+    low = take(widths["low"], "low")
+    raw = take(widths["raw"], "raw")
     width = p.n - p.m
     dense = np.zeros((nblocks, block_elems), np.uint16)
     if width:
+        max_bits = block_elems * width
         for blk in range(nblocks):
-            nbytes = (int(high_len[blk]) + 7) // 8
-            count = int(high_len[blk]) // width
-            dense[blk, :count] = bitio.np_unpack_bits_exact(
-                buf[off : off + nbytes], count, width)
+            bits = int(high_len[blk])
+            if bits < 0 or bits > max_bits:
+                raise WireError(
+                    f"block {blk}: high_len {bits} bits exceeds the "
+                    f"{max_bits}-bit block bound — corrupt record")
+            nbytes = (bits + 7) // 8
+            if off + nbytes > total:
+                raise WireError(f"block {blk}: high stream truncated")
+            count = bits // width
+            try:
+                dense[blk, :count] = bitio.np_unpack_bits_exact(
+                    view[off : off + nbytes], count, width)
+            except ValueError as e:
+                raise WireError(f"block {blk}: {e}") from None
             off += nbytes
-    high = np.asarray(jax.device_get(
-        bitio.pack_fixed(jnp.asarray(dense), width)))
+    if off != total:
+        raise WireError(
+            f"record has {total - off} trailing bytes after the high "
+            f"stream — length mismatch (corrupt or mis-framed)")
+    high = bitio.pack_fixed(dense, width, xp=np)
 
-    def reshard(a):
-        a = jnp.asarray(a)
-        if shards > 1:
-            a = a.reshape((shards, a.shape[0] // shards) + a.shape[1:])
-        return a
+    lead = ()
+    if stack:
+        lead += (stack,)
+    if shards > 1:
+        lead += (shards,)
+    flat = nblocks
+    for d in lead:
+        flat //= d
+
+    def relayout(a):
+        tail = a.shape[1:]
+        return h2d(np.ascontiguousarray(a.reshape(lead + (flat,) + tail)))
 
     streams = BlockStreams(
-        mask=reshard(mask), low=reshard(low), high=reshard(high),
-        high_len=reshard(high_len), raw=reshard(raw))
-    return CompressedTensor(
+        mask=relayout(mask), low=relayout(low), high=relayout(high),
+        high_len=relayout(high_len), raw=relayout(raw))
+    ct = CompressedTensor(
         streams=streams, raw_bytes=None, fmt_name=fmt.name, params=p,
         shape=shape, dtype_str=dtype_str, block_elems=block_elems,
         shards=shards, mode="enec")
+    # the exact high bits are in hand — prefill the wire-size cache so later
+    # nbytes_wire() calls never force a device sync
+    ct._set_wire_bytes(int(np.asarray(high_len, np.int64).sum()))
+    return ct
+
+
+def wire_stack(ct: CompressedTensor) -> int:
+    """Leading stream stack length of a deserialized stacked record (the
+    metadata describes one layer; the streams carry (L, ...))."""
+    if ct.mode != "enec":
+        return 0
+    lead = ct.streams.mask.ndim - (3 if ct.shards > 1 else 2)
+    return int(ct.streams.mask.shape[0]) if lead == 1 else 0

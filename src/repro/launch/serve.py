@@ -10,8 +10,17 @@ Modes (runtime/streaming.py, docs/SERVING.md):
 All three produce bit-identical logits; they differ only in where weight
 bytes live and when they decompress.
 
+Checkpoints (docs/CHECKPOINT.md): ``--ckpt DIR`` restores weights through
+``CheckpointManager.load_for_serving`` — compressed records flow disk->HBM
+and deserialize straight into weight handles; the dense model never exists
+on the host.  ``--save-ckpt DIR`` writes an enec-v2 checkpoint (in the
+serving layout of the active mode) and continues serving, so a smoke cycle
+can produce and consume its own checkpoint.
+
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
-        --batch 4 --tokens 8 --mode fused
+        --batch 4 --tokens 8 --mode fused --save-ckpt /tmp/ck
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
+        --batch 4 --tokens 8 --mode fused --ckpt /tmp/ck
 """
 from __future__ import annotations
 
@@ -26,6 +35,33 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.models import build_model
 from repro.runtime.streaming import assign_weight_modes, stream_stats
+
+
+def _restore_params(args, model, mode):
+    """--ckpt: weights come from the checkpoint, never from init."""
+    from repro.checkpoint.ckpt import CheckpointManager
+    from repro.core import wire
+
+    mgr = CheckpointManager(args.ckpt)
+    manifest = mgr.manifest()
+    names = {e["name"] for e in manifest["leaves"]}
+    # train-loop checkpoints are saved as {"params": ..., "opt": ...};
+    # serving checkpoints hold the params tree at the root
+    prefix = "params" if any(n.startswith("params/") for n in names) else ""
+    like = jax.eval_shape(model.init, jax.random.key(0))
+    wire.reset_transfer_stats()
+    t0 = time.perf_counter()
+    params, _ = mgr.load_for_serving(like, mode=mode, prefix=prefix,
+                                     min_bytes=args.min_bytes,
+                                     shards=args.shards)
+    jax.block_until_ready(jax.tree.leaves(params))
+    dt = time.perf_counter() - t0
+    ts = wire.transfer_stats()
+    print(f"[launch.serve] restored step {manifest['step']} from "
+          f"{args.ckpt} in {dt:.2f}s "
+          f"(h2d {ts['h2d_bytes'] / 1e6:.1f} MB compressed, "
+          f"ratio {manifest.get('ratio', 0):.3f}x)")
+    return params
 
 
 def main():
@@ -45,18 +81,43 @@ def main():
                     help="smallest leaf worth compressing")
     ap.add_argument("--shards", type=int, default=2,
                     help="stream-mode TP shard count for the block dim")
+    ap.add_argument("--ckpt", default=None, metavar="DIR",
+                    help="restore weights from an ENEC checkpoint via "
+                         "load_for_serving (docs/CHECKPOINT.md)")
+    ap.add_argument("--save-ckpt", default=None, metavar="DIR",
+                    help="write an enec-v2 serving-layout checkpoint of "
+                         "the initialized weights, then serve")
     args = ap.parse_args()
     if args.dense and args.mode not in (None, "dense"):
         ap.error("--dense conflicts with --mode " + args.mode)
+    if args.ckpt and args.save_ckpt:
+        ap.error("--ckpt and --save-ckpt are mutually exclusive "
+                 "(restored weights are already checkpointed)")
     mode = "dense" if args.dense else (args.mode or "fused")
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = dataclasses.replace(cfg, scan_layers=True)
     model = build_model(cfg)
-    params = model.init(jax.random.key(0))
-    params = assign_weight_modes(params, mode=mode,
-                                 min_bytes=args.min_bytes,
-                                 shards=args.shards)
+    if args.ckpt:
+        params = _restore_params(args, model, mode)
+    else:
+        params = model.init(jax.random.key(0))
+        params = assign_weight_modes(params, mode=mode,
+                                     min_bytes=args.min_bytes,
+                                     shards=args.shards)
+        if args.save_ckpt:
+            # the handle tree is saved directly (its stream bundles become
+            # the records), so the weights are compressed exactly once
+            from repro.checkpoint.ckpt import CheckpointManager
+            mgr = CheckpointManager(
+                args.save_ckpt,
+                serving_layout=None if mode == "dense" else mode,
+                serving_min_bytes=args.min_bytes,
+                serving_shards=args.shards)
+            t0 = time.perf_counter()
+            mgr.save(0, {"params": params}, blocking=True)
+            print(f"[launch.serve] saved serving checkpoint to "
+                  f"{args.save_ckpt} in {time.perf_counter() - t0:.2f}s")
     print(f"[launch.serve] mode={mode}:", stream_stats(params))
 
     max_len = args.prompt_len + args.tokens
@@ -80,17 +141,23 @@ def main():
     ttft = time.perf_counter() - t0
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     toks = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.tokens - 1):
-        tok, cache = decode_step(params, cache, tok)
-        toks.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    steps = max(args.tokens - 1, 1)
-    tpot = dt / steps
-    tok_s = args.batch * steps / dt
-    print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
-          f"TPOT={tpot*1e3:.1f}ms tok/s={tok_s:.1f} mode={mode}")
+    if args.tokens > 1:
+        t0 = time.perf_counter()
+        for _ in range(args.tokens - 1):
+            tok, cache = decode_step(params, cache, tok)
+            toks.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t0
+        steps = args.tokens - 1
+        tpot = dt / steps
+        tok_s = args.batch * steps / dt
+        print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
+              f"TPOT={tpot*1e3:.1f}ms tok/s={tok_s:.1f} mode={mode}")
+    else:
+        # a single token never enters the decode loop — timing it would
+        # divide by ~0 and print inf/garbage tok/s, so report TTFT only
+        print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
+              f"(prefill only; --tokens 1 has no decode steps) mode={mode}")
     print("[launch.serve] seq0:", jnp.stack(toks, 1)[0].tolist())
 
 

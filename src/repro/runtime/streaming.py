@@ -95,6 +95,54 @@ def _is_matmul_pos(pstr: str, ndim: int) -> bool:
 # the policy: params tree -> handle tree
 # ---------------------------------------------------------------------------
 
+def serving_job(pstr: str, leaf, mode: str,
+                min_bytes: int = MIN_STREAM_BYTES) -> Optional[dict]:
+    """The per-leaf compression plan for a compressing mode ("stream" /
+    "fused"): which layout to encode (``arr``) and the handle metadata to
+    attach.  ``None`` means the leaf is not eligible and stays raw/dense.
+
+    Shared between :func:`assign_weight_modes` and the checkpoint writer's
+    ``serving_layout`` path, so a checkpoint stores byte-for-byte the stream
+    bundle the policy would build — that is what lets ``load_for_serving``
+    deserialize records straight into handles.
+    """
+    if not stream_eligible(pstr, leaf.shape, leaf.dtype, min_bytes):
+        return None
+    matmul_pos = _is_matmul_pos(pstr, leaf.ndim)
+    if mode == "fused" and matmul_pos:
+        return dict(kind="fused", leaf=leaf, arr=matmul_tiles(leaf),
+                    k=leaf.shape[1], n=leaf.shape[2], matmul_pos=True)
+    tp_axis = _tp_axis_for(pstr, leaf.shape[1:])
+    return dict(kind="stream", leaf=leaf,
+                arr=jnp.moveaxis(leaf, 1 + tp_axis, 1),
+                tp_axis=tp_axis, layer_shape=leaf.shape[1:],
+                matmul_pos=matmul_pos)
+
+
+def build_serving_handle(job: dict, ct):
+    """Handle (or fallback leaf) from a :func:`serving_job` compression
+    result.  ``ct=None`` (const / incompressible) falls back to DenseWeight
+    at matmul positions — executor and logits never depend on
+    compressibility — or to the raw array elsewhere."""
+    leaf = job["leaf"]
+    if job["kind"] == "fused":
+        # tile accounting runs on the zero-padded layout; re-check the
+        # escape against the true (unpadded) raw bytes
+        if ct is not None and ct.nbytes_wire() >= leaf.size \
+                * leaf.dtype.itemsize:
+            ct = None
+        return (DenseWeight(w=leaf) if ct is None else
+                FusedWeight(ct=ct, k=job["k"], n=job["n"],
+                            dtype_str=str(leaf.dtype)))
+    if ct is None:  # incompressible / const escape
+        return DenseWeight(w=leaf) if job["matmul_pos"] else leaf
+    return StreamedWeight(
+        ct=ct, tp_axis=job["tp_axis"],
+        layer_shape=tuple(job["layer_shape"]),
+        dtype_str=str(leaf.dtype),
+        execution="matmul" if job["matmul_pos"] else "materialize")
+
+
 def assign_weight_modes(params, *, mode: str = "fused",
                         shared_params: Optional[EnecParams] = None,
                         min_bytes: int = MIN_STREAM_BYTES,
@@ -116,55 +164,42 @@ def assign_weight_modes(params, *, mode: str = "fused",
     would not beat raw bytes falls back to DenseWeight (matmul positions,
     so the executor — and therefore the logits — stay identical) or to the
     raw array.
+
+    Leaves that are ALREADY handles pass through untouched, so the policy
+    can finish a tree that ``CheckpointManager.load_for_serving`` partially
+    restored straight from wire records.
     """
     if mode not in WEIGHT_MODES:
         raise ValueError(f"unknown weight mode {mode!r}; "
                          f"expected one of {WEIGHT_MODES}")
     if mode == "fused":
         shards = 1
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_handle)
     out = [None] * len(flat)
-    jobs = []   # dicts: slot, kind, arr (to compress), per-kind metadata
+    jobs = []   # serving_job dicts + their slots
     for slot, (path, leaf) in enumerate(flat):
-        pstr = _pstr(path)
-        if not stream_eligible(pstr, leaf.shape, leaf.dtype, min_bytes):
+        if is_handle(leaf):
             out[slot] = leaf
             continue
-        matmul_pos = _is_matmul_pos(pstr, leaf.ndim)
+        pstr = _pstr(path)
         if mode == "dense":
-            out[slot] = DenseWeight(w=leaf) if matmul_pos else leaf
+            eligible = stream_eligible(pstr, leaf.shape, leaf.dtype,
+                                       min_bytes)
+            out[slot] = (DenseWeight(w=leaf)
+                         if eligible and _is_matmul_pos(pstr, leaf.ndim)
+                         else leaf)
             continue
-        if mode == "fused" and matmul_pos:
-            jobs.append(dict(slot=slot, kind="fused", leaf=leaf,
-                             arr=matmul_tiles(leaf),
-                             k=leaf.shape[1], n=leaf.shape[2]))
+        job = serving_job(pstr, leaf, mode, min_bytes)
+        if job is None:
+            out[slot] = leaf
             continue
-        tp_axis = _tp_axis_for(pstr, leaf.shape[1:])
-        jobs.append(dict(slot=slot, kind="stream", leaf=leaf,
-                         arr=jnp.moveaxis(leaf, 1 + tp_axis, 1),
-                         tp_axis=tp_axis, layer_shape=leaf.shape[1:],
-                         matmul_pos=matmul_pos))
+        job["slot"] = slot
+        jobs.append(job)
     cts = compress_stacked_many([j["arr"] for j in jobs],
                                 p=shared_params, shards=shards)
     for j, ct in zip(jobs, cts):
-        leaf = j["leaf"]
-        if j["kind"] == "fused":
-            # tile accounting runs on the zero-padded layout; re-check the
-            # escape against the true (unpadded) raw bytes
-            if ct is not None and ct.nbytes_wire() >= leaf.size \
-                    * leaf.dtype.itemsize:
-                ct = None
-            out[j["slot"]] = (DenseWeight(w=leaf) if ct is None else
-                              FusedWeight(ct=ct, k=j["k"], n=j["n"],
-                                          dtype_str=str(leaf.dtype)))
-        elif ct is None:  # incompressible / const escape
-            out[j["slot"]] = DenseWeight(w=leaf) if j["matmul_pos"] else leaf
-        else:
-            out[j["slot"]] = StreamedWeight(
-                ct=ct, tp_axis=j["tp_axis"],
-                layer_shape=tuple(j["layer_shape"]),
-                dtype_str=str(leaf.dtype),
-                execution="matmul" if j["matmul_pos"] else "materialize")
+        out[j["slot"]] = build_serving_handle(j, ct)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

@@ -34,7 +34,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import (CompressedTensor, decompress_array,
+from repro.core.api import (MATMUL_TILE, CompressedTensor, decompress_array,
+                            decompress_stacked_on_device,
                             untile_matmul_weight)
 from repro.kernels.ref import tiled_matmul_ref
 
@@ -119,6 +120,62 @@ class FusedWeight(WeightHandle):
 
 def is_handle(x) -> bool:
     return isinstance(x, WeightHandle)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint (de)serialization: spec <-> handle
+# ---------------------------------------------------------------------------
+
+def handle_spec(handle: WeightHandle) -> dict:
+    """JSON-able static metadata of a compressed handle — everything the
+    checkpoint manifest needs to rebuild it around a deserialized stream
+    bundle (docs/CHECKPOINT.md)."""
+    if isinstance(handle, StreamedWeight):
+        return {"kind": "stream", "tp_axis": handle.tp_axis,
+                "layer_shape": list(handle.layer_shape),
+                "dtype": handle.dtype_str, "execution": handle.execution}
+    if isinstance(handle, FusedWeight):
+        return {"kind": "fused", "k": handle.k, "n": handle.n,
+                "dtype": handle.dtype_str}
+    raise TypeError(f"no spec for handle type {type(handle).__name__}")
+
+
+def handle_from_spec(spec: dict, ct: CompressedTensor) -> WeightHandle:
+    """Inverse of :func:`handle_spec`: rebuild the handle around a stream
+    bundle deserialized straight from the wire — the dense weight is never
+    touched."""
+    kind = spec["kind"]
+    if kind == "stream":
+        return StreamedWeight(ct=ct, tp_axis=int(spec["tp_axis"]),
+                              layer_shape=tuple(spec["layer_shape"]),
+                              dtype_str=spec["dtype"],
+                              execution=spec.get("execution", "materialize"))
+    if kind == "fused":
+        return FusedWeight(ct=ct, k=int(spec["k"]), n=int(spec["n"]),
+                           dtype_str=spec["dtype"])
+    raise ValueError(f"unknown handle spec kind {kind!r}")
+
+
+def materialize_full(handle):
+    """Materialize a STACKED handle to its original dense ``(L, ...)`` leaf
+    in one decode dispatch (``materialize()`` operates on per-layer slices;
+    this is the whole-stack inverse the checkpoint loader needs to restore a
+    training tree from serving-layout records)."""
+    if isinstance(handle, DenseWeight):
+        return handle.w
+    if isinstance(handle, StreamedWeight):
+        w_perm = decompress_stacked_on_device(handle.ct)
+        w = jnp.moveaxis(w_perm, 1, 1 + handle.tp_axis)
+        return w.astype(jnp.dtype(handle.dtype_str))
+    if isinstance(handle, FusedWeight):
+        t = MATMUL_TILE
+        k, n = handle.k, handle.n
+        kp, np_ = -(-k // t) * t, -(-n // t) * t
+        flat = decompress_stacked_on_device(handle.ct)
+        tiles = flat.reshape(flat.shape[0], np_ // t, kp // t, t, t)
+        w = tiles.transpose(0, 2, 3, 1, 4).reshape(flat.shape[0], kp, np_)
+        return w[:, :k, :n].astype(jnp.dtype(handle.dtype_str))
+    raise TypeError(f"not a handle: {type(handle).__name__}")
 
 
 def resolve(tree):

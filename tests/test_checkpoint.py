@@ -1,4 +1,7 @@
-"""ENEC checkpointing: bit-exact restore, atomicity, retention, resume."""
+"""ENEC checkpointing: bit-exact restore, atomicity, retention, resume,
+crash-safety (enec-v2 container), and the compressed->handle serving
+restore."""
+import dataclasses
 import json
 
 import jax
@@ -6,7 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.ckpt import CheckpointManager
+from repro.checkpoint.ckpt import CheckpointError, CheckpointManager
+from repro.core import wire
 from conftest import make_realistic_bf16
 
 
@@ -121,3 +125,343 @@ def test_manifest_reports_compression(tmp_path):
     modes = {e["mode"] for e in manifest["leaves"]}
     assert "enec" in modes          # big float leaves compressed
     assert manifest["compressed_bytes"] < manifest["raw_bytes"]
+    assert manifest["format"] == "enec-v2"
+    # every record is indexed by (pack, offset, length)
+    assert all({"pack", "offset", "length"} <= e.keys()
+               for e in manifest["leaves"])
+
+
+# ---------------------------------------------------------------------------
+# crash safety / fault tolerance (enec-v2)
+# ---------------------------------------------------------------------------
+
+def test_gc_removes_stale_tmp_dirs(tmp_path):
+    """Crashed saves leave .tmp-step_* debris; the next committed save must
+    GC it (the seed's _gc only globbed step_* and leaked them forever)."""
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    (tmp_path / ".tmp-step_000000000001").mkdir()
+    (tmp_path / ".tmp-step_000000000009" / "sub").mkdir(parents=True)
+    mgr.save(2, _tree(1), blocking=True)
+    assert not list(tmp_path.glob(".tmp-step_*"))
+    out, _ = mgr.load(_tree(1))
+    _assert_trees_equal(_tree(1), out)
+
+
+def test_async_save_failure_reraises(tmp_path, monkeypatch):
+    """A failed async save must raise from wait() (and from the next
+    save()) — the seed's daemon thread swallowed the exception and wait()
+    reported success over a missing checkpoint."""
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(0)
+
+    def boom(step, names, payload, dense_specs):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(mgr, "_save_host", boom)
+    mgr.save(1, tree)              # async: exception lands in the thread
+    with pytest.raises(CheckpointError, match="disk full"):
+        mgr.wait()
+    monkeypatch.undo()
+    mgr.save(2, tree, blocking=True)   # manager stays usable after failure
+    assert mgr.latest_step() == 2
+
+    monkeypatch.setattr(mgr, "_save_host", boom)
+    mgr.save(3, tree)
+    with pytest.raises(CheckpointError, match="disk full"):
+        mgr.save(4, tree, blocking=True)   # next save() re-raises too
+
+
+def test_corrupt_pack_rejected(tmp_path):
+    """A flipped bit anywhere in a record's payload fails the frame CRC and
+    load() must refuse with a clear error, not silently misdecode."""
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(4)
+    mgr.save(1, tree, blocking=True)
+    man = mgr.manifest()
+    e = next(x for x in man["leaves"] if x["mode"] == "enec")
+    pack = tmp_path / "step_000000000001" / man["packs"][e["pack"]]
+    buf = bytearray(pack.read_bytes())
+    buf[e["offset"] + wire.FRAME_HEADER_BYTES + e["bytes"] // 2] ^= 0x08
+    pack.write_bytes(bytes(buf))
+    with pytest.raises(CheckpointError, match="CRC"):
+        mgr.load(tree)
+
+
+def test_corrupt_manifest_rejected(tmp_path):
+    """The manifest is the one file without a CRC — damage to it must still
+    surface as CheckpointError, not a bare JSONDecodeError."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree(7), blocking=True)
+    mpath = tmp_path / "step_000000000001" / "manifest.json"
+    mpath.write_text(mpath.read_text()[:40])   # truncated json
+    with pytest.raises(CheckpointError, match="corrupt"):
+        mgr.load(_tree(7))
+
+
+def test_truncated_pack_rejected(tmp_path):
+    mgr = CheckpointManager(tmp_path, writers=1)
+    tree = _tree(5)
+    mgr.save(1, tree, blocking=True)
+    pack = tmp_path / "step_000000000001" / "pack-00000.bin"
+    pack.write_bytes(pack.read_bytes()[:-10])
+    with pytest.raises(CheckpointError):
+        mgr.load(tree)
+
+
+def test_v1_checkpoint_still_loads(tmp_path):
+    """Back-compat: the seed's per-leaf t_*.enec layout must keep loading
+    bit-exactly through the hardened path."""
+    from repro.core import api as enec_api
+
+    tree = _tree(6)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    cdir = tmp_path / "step_000000000042"
+    cdir.mkdir(parents=True)
+    manifest = {"step": 42, "leaves": [], "format": "enec-v1"}
+    for i, (path, leaf) in enumerate(flat):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        leaf = jnp.asarray(leaf)
+        if leaf.dtype in enec_api.SUPPORTED_FLOAT_DTYPES:
+            ct = enec_api.compress_array(leaf)
+            blob = wire.to_wire(ct)
+            entry = {"name": name, "index": i, "shape": list(ct.shape),
+                     "dtype": ct.dtype_str, "mode": ct.mode}
+        else:
+            host = np.asarray(jax.device_get(leaf))
+            blob = b"RAW0" + host.tobytes()
+            entry = {"name": name, "index": i, "shape": list(host.shape),
+                     "dtype": str(host.dtype), "mode": "npraw"}
+        entry["bytes"] = len(blob)
+        (cdir / f"t_{i:05d}.enec").write_bytes(blob)
+        manifest["leaves"].append(entry)
+    (cdir / "manifest.json").write_text(json.dumps(manifest))
+    (tmp_path / "LATEST").write_text(cdir.name)
+    mgr = CheckpointManager(tmp_path)
+    out, man = mgr.load(tree)
+    _assert_trees_equal(tree, out)
+    assert man["step"] == 42
+
+
+# ---------------------------------------------------------------------------
+# compressed -> serving-handle restore (ISSUE 3 acceptance)
+# ---------------------------------------------------------------------------
+
+def _smoke_model():
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def _serve(cfg, model, tree):
+    pb = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0,
+                                       cfg.vocab_size)}
+    logits, cache = model.prefill_fn(tree, pb, 16)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dec, _ = model.decode_fn(tree, cache, tok)
+    return np.asarray(logits), np.asarray(dec)
+
+
+@pytest.mark.parametrize("layout,mode", [("fused", "fused"),
+                                         ("stream", "stream"),
+                                         ("fused", "stream"),
+                                         (None, "fused")])
+def test_load_for_serving_bit_identical_logits(tmp_path, layout, mode):
+    """save -> load_for_serving -> serve must produce logits BIT-IDENTICAL
+    to serving the original params under the same mode, for matching
+    layouts (direct record->handle restore), mismatched layouts
+    (device-side re-layout), and plain checkpoints (device decompress +
+    policy)."""
+    from repro.runtime.streaming import assign_weight_modes
+
+    cfg, model, params = _smoke_model()
+    ref = _serve(cfg, model, assign_weight_modes(params, mode=mode,
+                                                 min_bytes=1024, shards=2))
+    mgr = CheckpointManager(tmp_path, serving_layout=layout,
+                            serving_min_bytes=1024, serving_shards=2)
+    mgr.save(3, {"params": params, "opt": {"mu": jnp.zeros((256,),
+                                                           jnp.float32)}},
+             blocking=True)
+    tree, _ = mgr.load_for_serving(params, mode=mode, prefix="params",
+                                   min_bytes=1024, shards=2)
+    got = _serve(cfg, model, tree)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+
+def test_load_for_serving_transfers_compressed_bytes_only(tmp_path):
+    """The acceptance counter: restoring a serving-layout checkpoint must
+    stage ONLY compressed bytes host->device — the dense weights never
+    exist on the host."""
+    from repro.runtime.weights import FusedWeight, is_handle
+
+    cfg, model, params = _smoke_model()
+    mgr = CheckpointManager(tmp_path, serving_layout="fused",
+                            serving_min_bytes=1024)
+    mgr.save(1, {"params": params}, blocking=True)
+    wire.reset_transfer_stats()
+    tree, _ = mgr.load_for_serving(
+        jax.eval_shape(model.init, jax.random.key(0)),
+        mode="fused", prefix="params", min_bytes=1024)
+    h2d = wire.transfer_stats()["h2d_bytes"]
+    dense = sum(l.size * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(params))
+    assert 0 < h2d < dense, (h2d, dense)
+    handles = [l for l in jax.tree_util.tree_leaves(tree, is_leaf=is_handle)
+               if isinstance(l, FusedWeight)]
+    assert handles, "no record deserialized directly into a FusedWeight"
+    _serve(cfg, model, tree)   # and the restored tree actually serves
+
+
+def test_load_for_serving_skips_optimizer_records(tmp_path):
+    """Partial load-by-name: serving restore must never read optimizer
+    records — even corrupt opt bytes on disk cannot hurt it, while a full
+    load() refuses them."""
+    cfg, model, params = _smoke_model()
+    opt = {"mu": make_realistic_bf16(120_000, seed=21)}
+    mgr = CheckpointManager(tmp_path, serving_layout="fused",
+                            serving_min_bytes=1024)
+    mgr.save(2, {"params": params, "opt": opt}, blocking=True)
+    man = mgr.manifest()
+    e = next(x for x in man["leaves"] if x["name"].startswith("opt/"))
+    pack = tmp_path / "step_000000000002" / man["packs"][e["pack"]]
+    buf = bytearray(pack.read_bytes())
+    buf[e["offset"] + wire.FRAME_HEADER_BYTES + 3] ^= 0xFF
+    pack.write_bytes(bytes(buf))
+    tree, _ = mgr.load_for_serving(params, mode="fused", prefix="params",
+                                   min_bytes=1024)   # must not raise
+    with pytest.raises(CheckpointError):
+        mgr.load({"params": params, "opt": opt})
+
+
+def test_load_for_serving_missing_record_is_clear(tmp_path):
+    _, _, params = _smoke_model()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"params": params}, blocking=True)
+    with pytest.raises(CheckpointError, match="lacks weight records"):
+        mgr.load_for_serving(params, mode="fused", prefix="wrongprefix")
+
+
+def test_handle_tree_with_dense_weights_saves_and_loads(tmp_path):
+    """Saving a tree that already contains handles — including DenseWeight
+    fallbacks at policy-eligible positions — must produce a loadable
+    checkpoint (regression: the dense spec used to clobber the serving
+    record's handle spec, leaving an unrecoverable checkpoint)."""
+    from repro.runtime.streaming import assign_weight_modes
+
+    cfg, model, params = _smoke_model()
+    dense_tree = assign_weight_modes(params, mode="dense", min_bytes=1024)
+    mgr = CheckpointManager(tmp_path, serving_layout="fused",
+                            serving_min_bytes=1024)
+    mgr.save(1, {"params": dense_tree}, blocking=True)
+    out, _ = mgr.load({"params": params})
+    _assert_trees_equal(params, out["params"])
+    tree, _ = mgr.load_for_serving(params, mode="fused", prefix="params",
+                                   min_bytes=1024)
+    ref = _serve(cfg, model, assign_weight_modes(params, mode="fused",
+                                                 min_bytes=1024))
+    got = _serve(cfg, model, tree)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+    # a fused handle tree round-trips through its own records too
+    fused_tree = assign_weight_modes(params, mode="fused", min_bytes=1024)
+    mgr2 = CheckpointManager(tmp_path / "h", serving_layout="fused",
+                             serving_min_bytes=1024)
+    mgr2.save(2, {"params": fused_tree}, blocking=True)
+    out2, _ = mgr2.load({"params": params})
+    _assert_trees_equal(params, out2["params"])
+
+
+def test_load_for_serving_rejects_shape_mismatch(tmp_path):
+    """An adopted serving record must be validated against the model's leaf
+    shape — a different-size model with identical names fails with a clear
+    error, not a downstream trace-time shape explosion."""
+    _, _, params = _smoke_model()
+    mgr = CheckpointManager(tmp_path, serving_layout="fused",
+                            serving_min_bytes=1024)
+    mgr.save(1, {"params": params}, blocking=True)
+    wrong = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((l.shape[0] + 1,) + l.shape[1:],
+                                       l.dtype), params)
+    with pytest.raises(CheckpointError, match="vs model"):
+        mgr.load_for_serving(wrong, mode="fused", prefix="params",
+                             min_bytes=1024)
+
+
+def test_load_for_serving_honors_requested_shards(tmp_path):
+    """Adopting a stored stream record must respect the caller's TP width:
+    a shard-count mismatch re-lays-out on device instead of silently
+    keeping the checkpoint's sharding."""
+    from repro.runtime.weights import StreamedWeight, is_handle
+
+    _, _, params = _smoke_model()
+    mgr = CheckpointManager(tmp_path, serving_layout="stream",
+                            serving_min_bytes=1024, serving_shards=2)
+    mgr.save(1, {"params": params}, blocking=True)
+    for req in (2, 1):
+        tree, _ = mgr.load_for_serving(params, mode="stream",
+                                       prefix="params", min_bytes=1024,
+                                       shards=req)
+        handles = [l for l in jax.tree_util.tree_leaves(tree,
+                                                        is_leaf=is_handle)
+                   if isinstance(l, StreamedWeight)]
+        assert handles
+        assert all(h.ct.shards == req for h in handles), req
+
+
+def test_corrupt_v1_header_raises_checkpoint_error(tmp_path):
+    """v1 blobs have no CRC, so header corruption must still surface as a
+    CheckpointError naming the record — not a bare numpy ValueError."""
+    from repro.core import api as enec_api
+
+    x = make_realistic_bf16(40_000, seed=30)
+    blob = bytearray(wire.to_wire(enec_api.compress_array(x)))
+    blob[8] = 9          # ndim u32: 1 -> 9, shape read overruns the buffer
+    cdir = tmp_path / "step_000000000001"
+    cdir.mkdir(parents=True)
+    (cdir / "t_00000.enec").write_bytes(bytes(blob))
+    manifest = {"step": 1, "format": "enec-v1", "leaves": [
+        {"name": "w", "index": 0, "shape": [40_000], "dtype": "bfloat16",
+         "mode": "enec", "bytes": len(blob)}]}
+    (cdir / "manifest.json").write_text(json.dumps(manifest))
+    (tmp_path / "LATEST").write_text(cdir.name)
+    with pytest.raises(CheckpointError, match="w"):
+        CheckpointManager(tmp_path).load({"w": x})
+
+
+def test_optimizer_mirrors_stay_plain_records(tmp_path):
+    """Optimizer state mirroring the weight paths ('opt/.../wq') must not
+    be re-laid-out into serving records it can never serve."""
+    _, _, params = _smoke_model()
+    moments = jax.tree_util.tree_map(
+        lambda l: (l.astype(jnp.float32) ** 2).astype(l.dtype), params)
+    tree = {"params": params, "opt": {"mu": moments}}
+    mgr = CheckpointManager(tmp_path, serving_layout="fused",
+                            serving_min_bytes=1024)
+    mgr.save(1, tree, blocking=True)
+    man = mgr.manifest()
+    for e in man["leaves"]:
+        if e["name"].startswith("opt/"):
+            assert "stack" not in e and \
+                e.get("handle", {}).get("kind") not in ("stream", "fused"), e
+    assert any("stack" in e for e in man["leaves"]
+               if e["name"].startswith("params/"))
+    out, _ = mgr.load(tree)
+    _assert_trees_equal(tree, out)
+
+
+def test_serving_layout_checkpoint_restores_dense_training_tree(tmp_path):
+    """A serving-layout checkpoint is still a full-fidelity training
+    checkpoint: load() must materialize the original dense leaves
+    bit-exactly from the stacked serving records."""
+    _, _, params = _smoke_model()
+    tree = {"params": params, "opt": {"mu": jnp.zeros((64,), jnp.float32)}}
+    mgr = CheckpointManager(tmp_path, serving_layout="stream",
+                            serving_min_bytes=1024, serving_shards=2)
+    mgr.save(5, tree, blocking=True)
+    out, _ = mgr.load(tree)
+    _assert_trees_equal(tree, out)

@@ -1,0 +1,189 @@
+"""ISSUE 3: framed wire records — edge-case round-trips + corruption
+rejection.
+
+The enec-v2 container concatenates framed records into pack files, so the
+wire layer must (a) round-trip every mode and edge shape bit-exactly,
+(b) be self-delimiting (explicit payload length), and (c) reject truncated
+or bit-flipped bytes with a clear :class:`WireError` instead of misdecoding.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitio, wire
+from repro.core.api import (compress_array, compress_stacked,
+                            decompress_array, decompress_stacked)
+from repro.core.params import EnecParams
+from conftest import make_realistic_bf16
+
+
+def _bits(x):
+    x = np.asarray(jax.device_get(x))
+    return x.view(np.uint16 if x.dtype.itemsize == 2 else np.uint32)
+
+
+def _roundtrip(ct):
+    return wire.from_wire(wire.frame(wire.to_wire(ct))[wire.FRAME_HEADER_BYTES:])
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_and_pack_iteration():
+    payloads = [b"", b"x", b"hello world" * 100]
+    pack = b"".join(wire.frame(p) for p in payloads)
+    got = [(off, bytes(p)) for off, p in wire.iter_frames(pack)]
+    assert [p for _, p in got] == payloads
+    # offsets are exact frame starts
+    for off, p in got:
+        q, _ = wire.read_frame(pack, off)
+        assert bytes(q) == p
+
+
+def test_frame_rejects_truncation_bitflip_and_bad_magic():
+    fr = wire.frame(b"some payload bytes")
+    with pytest.raises(wire.WireError, match="truncated"):
+        wire.read_frame(fr[:-3])
+    with pytest.raises(wire.WireError, match="header truncated"):
+        wire.read_frame(fr[: wire.FRAME_HEADER_BYTES - 2])
+    flipped = bytearray(fr)
+    flipped[wire.FRAME_HEADER_BYTES + 4] ^= 0x20
+    with pytest.raises(wire.WireError, match="CRC"):
+        wire.read_frame(bytes(flipped))
+    with pytest.raises(wire.WireError, match="magic"):
+        wire.read_frame(b"\x00" * len(fr))
+
+
+def test_record_truncation_and_garbage_rejected():
+    ct = compress_array(make_realistic_bf16(40_000, seed=1))
+    blob = wire.to_wire(ct)
+    with pytest.raises(wire.WireError):
+        wire.from_wire(blob[:-3])          # truncated high stream
+    with pytest.raises(wire.WireError):
+        wire.from_wire(blob[:20])          # truncated header/params
+    with pytest.raises(wire.WireError, match="trailing"):
+        wire.from_wire(blob + b"\x00\x00")  # mis-framed length
+    with pytest.raises(wire.WireError, match="magic"):
+        wire.from_wire(b"\xff" * len(blob))
+
+
+def test_raw_record_length_validated():
+    x = jnp.asarray(np.arange(100, dtype=np.int32))
+    ct = compress_array(x)                 # non-float -> raw escape
+    assert ct.mode == "raw"
+    blob = wire.to_wire(ct)
+    np.testing.assert_array_equal(
+        np.asarray(decompress_array(wire.from_wire(blob))), np.asarray(x))
+    with pytest.raises(wire.WireError, match="payload bytes"):
+        wire.from_wire(blob[:-4])          # raw payload shorter than shape
+
+
+# ---------------------------------------------------------------------------
+# edge-case round-trips
+# ---------------------------------------------------------------------------
+
+def test_width_zero_no_high_stream():
+    """n == m: every group fits the threshold, the high stream is empty and
+    the record must still frame and round-trip bit-exactly."""
+    r = np.random.default_rng(0)
+    # exponents confined to [120, 126] so n=4 (== m) covers the range
+    x = jnp.asarray((r.uniform(0.25, 1.9, 30_000)
+                     * r.choice([-1.0, 1.0], 30_000)).astype("float32")
+                    ).astype(jnp.bfloat16)
+    p = EnecParams(b=126, n=4, m=4, L=16, l=119)
+    ct = compress_array(x, p=p)
+    assert ct.mode == "enec" and ct.params.n == ct.params.m
+    assert int(np.asarray(jax.device_get(ct.streams.high_len)).sum()) == 0
+    ct2 = _roundtrip(ct)
+    np.testing.assert_array_equal(_bits(x), _bits(decompress_array(ct2)))
+
+
+def test_empty_and_const_leaves_roundtrip():
+    empty = jnp.zeros((0,), jnp.bfloat16)
+    ct = compress_array(empty)
+    out = decompress_array(_roundtrip(ct))
+    assert out.shape == (0,) and out.dtype == jnp.bfloat16
+
+    const = jnp.full((4096,), 1.5, jnp.float16)
+    ct = compress_array(const)
+    assert ct.mode == "const"
+    out = decompress_array(_roundtrip(ct))
+    np.testing.assert_array_equal(_bits(const), _bits(out))
+
+
+def test_bf16_dtype_tag_is_eight_chars():
+    """'bfloat16' is exactly 8 characters — the fixed u8[8] dtype tag must
+    survive without truncation or stray NULs."""
+    x = make_realistic_bf16(20_000, seed=3)
+    ct = compress_array(x)
+    assert ct.dtype_str == "bfloat16" and len(ct.dtype_str) == 8
+    ct2 = _roundtrip(ct)
+    assert ct2.dtype_str == "bfloat16"
+    assert decompress_array(ct2).dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_sharded_streams_roundtrip(shards):
+    x = make_realistic_bf16(200_000, seed=5)
+    ct = compress_array(x, shards=shards)
+    ct2 = _roundtrip(ct)
+    assert ct2.streams.mask.shape[0] == shards
+    np.testing.assert_array_equal(_bits(x), _bits(decompress_array(ct2)))
+
+
+@pytest.mark.parametrize("shards", [1, 2])
+def test_stacked_records_roundtrip(shards):
+    xs = jnp.stack([make_realistic_bf16(200_000, seed=10 + i)
+                    for i in range(3)])
+    ct = compress_stacked(xs, shards=shards)
+    blob = wire.to_wire(ct, stacked=True)
+    ct2 = wire.from_wire(blob)
+    assert wire.wire_stack(ct2) == 3
+    assert ct2.streams.mask.shape[:1] == (3,)
+    np.testing.assert_array_equal(_bits(decompress_stacked(ct)),
+                                  _bits(decompress_stacked(ct2)))
+
+
+def test_stacked_requires_enec_mode():
+    ct = compress_array(jnp.asarray(np.arange(64, dtype=np.int32)))
+    with pytest.raises(wire.WireError, match="stacked"):
+        wire.to_wire(ct, stacked=True)
+
+
+# ---------------------------------------------------------------------------
+# host-side bit packing (the xp=np path the wire codec rides)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [1, 3, 5, 8, 11, 16])
+def test_pack_fixed_host_matches_device(width):
+    r = np.random.default_rng(width)
+    vals = r.integers(0, 1 << width, (4, 2048)).astype(np.uint16)
+    dev = np.asarray(jax.device_get(bitio.pack_fixed(jnp.asarray(vals), width)))
+    host = bitio.pack_fixed(vals, width, xp=np)
+    np.testing.assert_array_equal(dev, host)
+    back = bitio.unpack_fixed(host, 2048, width, xp=np)
+    np.testing.assert_array_equal(back, vals)
+
+
+def test_np_unpack_bits_exact_rejects_short_buffer():
+    vals = np.arange(64, dtype=np.uint32) % 8
+    packed = bitio.np_pack_bits_exact(vals, 3)
+    with pytest.raises(ValueError, match="truncated"):
+        bitio.np_unpack_bits_exact(packed[:-2], 64, 3)
+
+
+def test_transfer_counter_counts_uploads():
+    wire.reset_transfer_stats()
+    # block-aligned so the padded device layout stays below dense bytes
+    ct = compress_array(make_realistic_bf16(4 * 16384, seed=9))
+    blob = wire.to_wire(ct)
+    assert wire.transfer_stats()["h2d_bytes"] == 0   # serialization is host-only
+    ct2 = wire.from_wire(blob)
+    st = wire.transfer_stats()
+    assert st["h2d_bytes"] > 0
+    # only the (padded) compressed streams were uploaded — far below dense
+    assert st["h2d_bytes"] < ct.nbytes_raw()
+    np.testing.assert_array_equal(_bits(decompress_array(ct)),
+                                  _bits(decompress_array(ct2)))
