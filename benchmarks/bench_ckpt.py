@@ -1,10 +1,14 @@
-"""ISSUE 3: checkpoint save/load throughput + restore-to-serve wall clock.
+"""ISSUE 3/4: checkpoint save/load throughput + restore wall clock +
+decode dispatch accounting.
 
 Measures the enec-v2 container against the v1-style dense-inflate restore:
 
   ckpt/save          blocking save() of a {"params", "opt"} training tree
                      (device-resident compression + threadpool pack writer)
-  ckpt/load          dense training restore (bit-exact, decode on device)
+  ckpt/load          dense training restore (bit-exact; ALL compressed
+                     records decode in one batched pipeline pass —
+                     O(#decoder buckets) decode dispatches, reported in
+                     the derived column via decode_cache_stats)
   ckpt/restore_v1    the dense-inflate serving path the seed had: load()
                      the dense tree, then re-compress via
                      assign_weight_modes — the weight bytes cross the host
@@ -12,10 +16,12 @@ Measures the enec-v2 container against the v1-style dense-inflate restore:
   ckpt/restore_v2    load_for_serving() on a serving-layout checkpoint:
                      framed records deserialize straight into weight
                      handles; only compressed bytes are staged to device
+                     (zero decode dispatches when every layout matches)
 
-The derived column carries the manifest ratio and the host->device bytes of
+The derived column carries the manifest ratio, the host->device bytes of
 the v2 restore (wire.transfer_stats) — the quantity the paper says decides
-fleet-scale restore time.
+fleet-scale restore time — and the decode dispatch/compile counters that
+the bench-smoke CI job asserts never regress to per-record counts.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ import jax.numpy as jnp
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get_smoke_config
 from repro.core import wire
+from repro.core.api import decode_cache_stats, reset_decode_cache_stats
 from repro.models import build_model
 from repro.runtime.streaming import assign_weight_modes
 
@@ -60,8 +67,14 @@ def run():
                      f"mb_s={raw_mb / dt:.1f};ratio={manifest['ratio']:.3f};"
                      f"packs={len(manifest['packs'])}"))
 
+        n_records = len(manifest["leaves"])
+        reset_decode_cache_stats()
         dt, _ = _once(lambda: mgr.load(tree))
-        rows.append(("ckpt/load", dt * 1e6, f"mb_s={raw_mb / dt:.1f}"))
+        st = decode_cache_stats()
+        rows.append(("ckpt/load", dt * 1e6,
+                     f"mb_s={raw_mb / dt:.1f};records={n_records};"
+                     f"decode_dispatches={st['dispatches']};"
+                     f"decode_compiles={st['compiles']}"))
 
         # v1-style dense-inflate restore-to-serve: dense load + re-compress
         dt, _ = _once(lambda: assign_weight_modes(
@@ -72,10 +85,13 @@ def run():
         # v2 direct restore: records -> handles, compressed bytes only
         like = jax.eval_shape(model.init, jax.random.key(0))
         wire.reset_transfer_stats()
+        reset_decode_cache_stats()
         dt, _ = _once(lambda: mgr.load_for_serving(
             like, mode="fused", prefix="params", min_bytes=1024))
         ts = wire.transfer_stats()
+        st = decode_cache_stats()
         rows.append(("ckpt/restore_v2_to_handles", dt * 1e6,
                      f"s={dt:.3f};h2d_mb={ts['h2d_bytes'] / 1e6:.2f};"
-                     f"dense_mb={raw_mb / 2:.2f}"))
+                     f"dense_mb={raw_mb / 2:.2f};"
+                     f"decode_dispatches={st['dispatches']}"))
     return rows

@@ -1,23 +1,30 @@
-"""Whole-tree compression pipeline: seed per-layer loop vs device-resident
-stacked path (ISSUE 1 tentpole).
+"""Whole-tree compression AND decompression pipeline: seed per-layer loop
+vs device-resident stacked path (ISSUE 1 + ISSUE 4 tentpoles).
 
-The legacy path below is a faithful copy of the seed pipeline: per tensor it
-moved the FULL stack to the host for the parameter search, then compressed
-each layer with its own jit dispatch (host round-trip for the widening
-check, blocking ``device_get`` for the wire-size escape), and finally
-``jnp.stack``-copied the L stream pytrees.  The new path is
+The legacy compress path below is a faithful copy of the seed pipeline: per
+tensor it moved the FULL stack to the host for the parameter search, then
+compressed each layer with its own jit dispatch (host round-trip for the
+widening check, blocking ``device_get`` for the wire-size escape), and
+finally ``jnp.stack``-copied the L stream pytrees.  The new path is
 ``compress_params_for_streaming`` on top of ``compress_stacked_many``:
 device-side stats, one tiny host transfer per tree, one encode dispatch per
 layer-stack bucket.
 
+The decode side mirrors it (ISSUE 4): the legacy path decoded one layer
+per jit dispatch (O(#layers) dispatches, one compile per distinct shape);
+the new path is ``materialize_weight_tree`` on ``decompress_stacked_many``
+— every leaf sharing a decoder bucket decodes in one concatenated dispatch
+(O(#buckets) for the whole tree, ``decode_cache_stats`` asserts it).
+
 Both a cold run (caches cleared — the production compress-once-per-model
 scenario, where compile count dominates) and a warm steady state are timed,
 on synthetic llama3_2_1b / qwen3_32b layer stacks (real layer counts,
-CPU-scaled widths).
+CPU-scaled widths).  ``BENCH_SMOKE=1`` restricts to the smallest config.
 """
 from __future__ import annotations
 
 import functools
+import os
 import time
 import zlib
 
@@ -30,7 +37,8 @@ from repro.core import codec, params as params_mod
 from repro.core.api import CompressedTensor
 from repro.core.dtypes import FORMATS, format_for
 from repro.runtime.streaming import (StreamedWeight,
-                                     compress_params_for_streaming)
+                                     compress_params_for_streaming,
+                                     materialize_weight_tree)
 
 # real layer counts, widths scaled for a CPU bench.  Layer slices of 1-2
 # blocks put the run in the dispatch/round-trip-bound regime that the NPU
@@ -41,6 +49,12 @@ MODELS = {
     "llama3_2_1b": dict(n_layers=16, d=128, d_kv=128, d_ff=256),
     "qwen3_32b": dict(n_layers=64, d=128, d_kv=128, d_ff=256),
 }
+
+
+def _active_models() -> dict:
+    if os.environ.get("BENCH_SMOKE"):
+        return {"llama3_2_1b": MODELS["llama3_2_1b"]}
+    return MODELS
 SHARDS = 1
 COLD_ITERS = 2
 WARM_ITERS = 5
@@ -128,13 +142,54 @@ def stacked_compress_tree(params, shards: int = SHARDS):
 
 
 # ---------------------------------------------------------------------------
+# legacy (seed) per-layer decode path, kept verbatim for the comparison
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=512)
+def _legacy_jit_decode(fmt_name: str, p, n_elems: int):
+    fmt = FORMATS[fmt_name]
+    return jax.jit(lambda streams: codec.decode_blocks(streams, n_elems,
+                                                       fmt, p))
+
+
+def legacy_decompress_tree(streamed):
+    """Seed decode path: one jit'd decode dispatch per LAYER per leaf (the
+    exact shape of the retired ``decompress_on_device``-per-slice restore),
+    plus the per-leaf un-permute."""
+    flat, treedef = jax.tree_util.tree_flatten(
+        streamed, is_leaf=lambda x: isinstance(x, StreamedWeight))
+    out = []
+    for sw in flat:
+        ct = sw.ct
+        n_layers = ct.streams.mask.shape[0]
+        layers = []
+        for i in range(n_layers):
+            s = jax.tree.map(lambda a: a[i], ct.streams)   # one layer slice
+            flat_s = jax.tree.map(
+                lambda a: a.reshape((-1,) + a.shape[-1:])
+                if a.ndim > 1 else a.reshape(-1), s)
+            bits = _legacy_jit_decode(ct.fmt_name, ct.params,
+                                      ct.block_elems)(flat_s)
+            layers.append(codec.from_blocks(bits, ct.shape, ct.fmt))
+        w = jnp.stack(layers).astype(jnp.dtype(ct.dtype_str))
+        out.append(jnp.moveaxis(w, 1, 1 + sw.tp_axis))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stacked_decompress_tree(streamed):
+    return materialize_weight_tree(streamed)
+
+
+# ---------------------------------------------------------------------------
 # timing
 # ---------------------------------------------------------------------------
 
 def _clear_all_caches():
     jax.clear_caches()
     _legacy_jit_encode.cache_clear()
+    _legacy_jit_decode.cache_clear()
     enec_api.reset_encode_cache_stats(clear_cache=True)
+    enec_api.reset_decode_cache_stats(clear_cache=True)
 
 
 def _time_once(fn, params) -> float:
@@ -172,9 +227,21 @@ def _verify_lossless(params, streamed) -> None:
             np.asarray(jax.device_get(dec)).view(np.uint16))
 
 
+def _verify_decode_parity(params, a, b):
+    for x, y, z in zip(jax.tree_util.tree_leaves(params),
+                       jax.tree_util.tree_leaves(a),
+                       jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(x)).view(np.uint16),
+            np.asarray(jax.device_get(y)).view(np.uint16))
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(y)).view(np.uint16),
+            np.asarray(jax.device_get(z)).view(np.uint16))
+
+
 def run():
     rows = []
-    for arch in MODELS:
+    for arch, spec in _active_models().items():
         params = synthetic_stacked_params(arch)
         streamed = stacked_compress_tree(params)
         _verify_lossless(params, streamed)
@@ -191,7 +258,7 @@ def run():
         st = enec_api.encode_cache_stats()
 
         n_leaves = len(jax.tree_util.tree_leaves(params))
-        n_layers = MODELS[arch]["n_layers"]
+        n_layers = spec["n_layers"]
         rows += [
             (f"pipeline_tree/{arch}/legacy_cold", legacy_cold * 1e6,
              f"{n_leaves * n_layers}_encode_dispatches"),
@@ -203,6 +270,37 @@ def run():
              f"{legacy_cold / stacked_cold:.2f}x"),
             (f"pipeline_tree/{arch}/speedup_warm", 0.0,
              f"{legacy_warm / stacked_warm:.2f}x"),
+        ]
+
+        # -- whole-tree DECOMPRESS: per-layer loop vs batched decode -------
+        _verify_decode_parity(params, legacy_decompress_tree(streamed),
+                              stacked_decompress_tree(streamed))
+        d_legacy_cold = _time_cold(legacy_decompress_tree, streamed)
+        _clear_all_caches()
+        d_stacked_cold = _time_cold(stacked_decompress_tree, streamed)
+        d_legacy_warm = _time_warm(legacy_decompress_tree, streamed)
+        _clear_all_caches()
+        d_stacked_warm = _time_warm(stacked_decompress_tree, streamed)
+        # dispatch/compile accounting for ONE whole-tree decompression
+        _clear_all_caches()
+        jax.block_until_ready(
+            jax.tree.leaves(stacked_decompress_tree(streamed)))
+        dst = enec_api.decode_cache_stats()
+        rows += [
+            (f"pipeline_tree/{arch}/decode_legacy_cold",
+             d_legacy_cold * 1e6, f"{n_leaves * n_layers}_decode_dispatches"),
+            (f"pipeline_tree/{arch}/decode_stacked_cold",
+             d_stacked_cold * 1e6,
+             f"{dst['dispatches']}_decode_dispatches_"
+             f"{dst['compiles']}_compiles"),
+            (f"pipeline_tree/{arch}/decode_legacy_warm",
+             d_legacy_warm * 1e6, ""),
+            (f"pipeline_tree/{arch}/decode_stacked_warm",
+             d_stacked_warm * 1e6, ""),
+            (f"pipeline_tree/{arch}/decode_speedup_cold", 0.0,
+             f"{d_legacy_cold / d_stacked_cold:.2f}x"),
+            (f"pipeline_tree/{arch}/decode_speedup_warm", 0.0,
+             f"{d_legacy_warm / d_stacked_warm:.2f}x"),
         ]
     return rows
 

@@ -59,8 +59,8 @@ import numpy as np
 from repro.core import api as enec_api
 from repro.core import wire as enec_wire
 from repro.runtime import streaming as rt_streaming
-from repro.runtime.weights import (DenseWeight, handle_from_spec, handle_spec,
-                                   is_handle, materialize_full)
+from repro.runtime.weights import (DenseWeight, finish_materialize,
+                                   handle_from_spec, handle_spec, is_handle)
 
 _ENEC_DTYPES = enec_api.SUPPORTED_FLOAT_DTYPES
 
@@ -419,10 +419,11 @@ class CheckpointManager:
         """Yield ``(entry, payload_bytes)`` for ``entries``, validated
         (frame length + CRC for v2 packs; declared blob size for v1
         per-leaf files), one record at a time in pack/offset order — the
-        caller decodes as it goes, so peak host memory holds one record's
-        compressed bytes, never the whole checkpoint.  Only the requested
-        records are read (partial load never touches the rest of the
-        pack)."""
+        caller stages each record to device as it goes, so peak host
+        memory holds one record's compressed bytes, never the whole
+        checkpoint (decoding is deferred into one batched pass).  Only the
+        requested records are read (partial load never touches the rest of
+        the pack)."""
         fmt = manifest.get("format", "enec-v1")
         if fmt == "enec-v1":
             for e in entries:
@@ -469,20 +470,44 @@ class CheckpointManager:
                 f"manifest declares shape {e['shape']}")
         return enec_wire.h2d(arr.reshape(e["shape"]))
 
-    def _decode_dense(self, e, blob):
-        """One record -> dense value, decompressed ON DEVICE (compressed
-        bytes are the only thing that crosses the host->device link)."""
-        if e["mode"] == "npraw":
-            return self._decode_npraw(e, blob)
+    def _record_ct(self, e, blob):
+        """Deserialize one compressed record's payload — the compressed
+        streams move to device here; nothing is decoded yet."""
         try:
-            ct = enec_wire.from_wire(blob)
+            return enec_wire.from_wire(blob)
         except enec_wire.WireError as err:
             raise CheckpointError(f"{e['name']}: {err}") from err
-        if "handle" in e and e.get("stack"):
-            # serving-layout record: rebuild the handle, then materialize
-            # the whole stack (one decode dispatch) back to the dense leaf
-            return materialize_full(handle_from_spec(e["handle"], ct))
-        return enec_api.decompress_on_device(ct)
+
+    def _queue_record(self, e, blob, pending, vals, like):
+        """One record -> either an eagerly decoded host value (``npraw``)
+        or a device-resident compressed object queued on ``pending`` for
+        the batched decode pass (serving-layout records become handles;
+        plain enec/raw/const records stay CompressedTensors)."""
+        name = e["name"]
+        if e["mode"] == "npraw":
+            val = self._decode_npraw(e, blob)
+            self._check_leaf(name, val.shape, like)
+            vals[name] = val.astype(like.dtype)
+            return
+        ct = self._record_ct(e, blob)
+        obj = (handle_from_spec(e["handle"], ct)
+               if "handle" in e and e.get("stack") else ct)
+        pending.append((name, like, obj))
+
+    def _decode_pending(self, pending, vals):
+        """Decode every queued compressed record in ONE batched pipeline
+        pass: records sharing a decoder bucket — serving-layout handle
+        records and plain enec records alike — share a concatenated decode
+        dispatch (``core.api.decompress_stacked_many``), so restoring a
+        model costs O(#buckets) decode dispatches instead of one per
+        record.  The decode runs where the streams live (device); outputs
+        are bit-identical to the retired per-record path."""
+        decs = enec_api.decompress_stacked_many(
+            [obj.ct if is_handle(obj) else obj for _, _, obj in pending])
+        for (name, like, obj), dec in zip(pending, decs):
+            val = finish_materialize(obj, dec) if is_handle(obj) else dec
+            self._check_leaf(name, val.shape, like)
+            vals[name] = val.astype(like.dtype)
 
     def load(self, like_tree, step: Optional[int] = None,
              shardings=None):
@@ -494,12 +519,12 @@ class CheckpointManager:
         self._require_records(names, by_name, cdir)
         like_by_name = dict(zip(names, leaves))
         vals = {}
+        pending: list = []
         for e, payload in self._iter_records(cdir, manifest,
                                              [by_name[n] for n in names]):
-            name, like = e["name"], like_by_name[e["name"]]
-            val = self._decode_dense(e, payload)
-            self._check_leaf(name, val.shape, like)
-            vals[name] = val.astype(like.dtype)
+            self._queue_record(e, payload, pending, vals,
+                               like_by_name[e["name"]])
+        self._decode_pending(pending, vals)
         tree = jax.tree_util.tree_unflatten(treedef,
                                             [vals.pop(n) for n in names])
         if shardings is not None:
@@ -548,6 +573,7 @@ class CheckpointManager:
         self._require_records(full, by_name, cdir, what="weight records")
         like_by_name = dict(zip(full, leaves))
         vals = {}
+        pending: list = []
         for e, payload in self._iter_records(cdir, manifest,
                                              [by_name[n] for n in full]):
             name, like = e["name"], like_by_name[e["name"]]
@@ -558,24 +584,19 @@ class CheckpointManager:
                     tuple(spec["layer_shape"]) if spec["kind"] == "stream"
                     else (int(spec["k"]), int(spec["n"])))
                 self._check_leaf(name, leaf_shape, like, dtype=spec["dtype"])
-                try:
-                    ct = enec_wire.from_wire(payload)
-                except enec_wire.WireError as err:
-                    raise CheckpointError(f"{name}: {err}") from err
+                ct = self._record_ct(e, payload)
                 # adopt only when the stored stream layout matches the
                 # requested TP width (fused mode forces shards=1) — a
-                # mismatch falls through to the device re-layout below
-                # instead of silently keeping the checkpoint's sharding
+                # mismatch joins the batched decode + device re-layout
+                # below instead of silently keeping the ckpt's sharding
                 req_shards = 1 if mode == "fused" else shards
                 if ct.shards == req_shards:
                     vals[name] = handle_from_spec(spec, ct)
                     continue
-                val = materialize_full(handle_from_spec(spec, ct))
-                vals[name] = val.astype(like.dtype)
+                pending.append((name, like, handle_from_spec(spec, ct)))
                 continue
-            val = self._decode_dense(e, payload)
-            self._check_leaf(name, val.shape, like)
-            vals[name] = val.astype(like.dtype)
+            self._queue_record(e, payload, pending, vals, like)
+        self._decode_pending(pending, vals)
         tree = jax.tree_util.tree_unflatten(treedef,
                                             [vals.pop(n) for n in full])
         tree = rt_streaming.assign_weight_modes(

@@ -1,9 +1,11 @@
 """ENEC core: the paper's contribution as a composable JAX module."""
 from .api import (CompressedTensor, abstract_compressed, compress_array,
                   compress_stacked, compress_stacked_many, compress_tree,
-                  decompress_array, decompress_stacked, decompress_tree,
+                  decode_cache_stats, decompress_array, decompress_stacked,
+                  decompress_stacked_many, decompress_tree,
                   encode_cache_stats, precompute_wire_bytes,
-                  reset_encode_cache_stats, set_encode_backend, slice_stacked,
+                  reset_decode_cache_stats, reset_encode_cache_stats,
+                  set_decode_backend, set_encode_backend, slice_stacked,
                   tree_ratio)
 from .codec import BlockStreams, decode_blocks, encode_blocks
 from .dtypes import BF16, FORMATS, FP16, FP32, FloatFormat, format_for
@@ -14,9 +16,11 @@ from .stats import StackStats, exponent_histogram_device, stack_stats
 __all__ = [
     "CompressedTensor", "abstract_compressed", "compress_array",
     "compress_stacked", "compress_stacked_many", "compress_tree",
-    "decompress_array", "decompress_stacked", "decompress_tree",
-    "encode_cache_stats", "precompute_wire_bytes", "reset_encode_cache_stats",
-    "set_encode_backend", "slice_stacked", "tree_ratio",
+    "decode_cache_stats", "decompress_array", "decompress_stacked",
+    "decompress_stacked_many", "decompress_tree",
+    "encode_cache_stats", "precompute_wire_bytes",
+    "reset_decode_cache_stats", "reset_encode_cache_stats",
+    "set_decode_backend", "set_encode_backend", "slice_stacked", "tree_ratio",
     "BlockStreams", "decode_blocks", "encode_blocks",
     "BF16", "FORMATS", "FP16", "FP32", "FloatFormat", "format_for",
     "DEFAULT_BLOCK_ELEMS", "EnecParams", "expected_ratio", "search",

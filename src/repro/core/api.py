@@ -240,6 +240,128 @@ def _encode_bucketed(bits, fmt: FloatFormat, p: EnecParams, block_elems: int,
 
 
 # ---------------------------------------------------------------------------
+# decoder compile cache — the decode-side mirror of the encoder cache
+# ---------------------------------------------------------------------------
+
+_decode_backend = "reference"
+_decode_cache: dict = {}
+_decode_stats = {"compiles": 0, "cache_hits": 0, "dispatches": 0,
+                 "padded_blocks": 0}
+
+
+def set_decode_backend(name: str) -> None:
+    """Select the decoder the pipeline dispatches: the pure-jnp reference
+    codec (default, any backend) or the Pallas kernel (TPU hot path,
+    ``interpret=True`` elsewhere).  Mirror of :func:`set_encode_backend`."""
+    global _decode_backend
+    if name not in _ENCODE_BACKENDS:
+        raise ValueError(f"unknown decode backend {name!r}; "
+                         f"expected one of {_ENCODE_BACKENDS}")
+    if name != _decode_backend:
+        _decode_backend = name
+        _decode_cache.clear()
+
+
+def decode_cache_stats() -> dict:
+    """Counters for the jit'd-decoder cache (benchmarks + dispatch tests).
+
+    ``compiles`` counts distinct (backend, fmt, params, block_elems, bucket)
+    decoder instantiations, ``dispatches`` counts decode calls,
+    ``padded_blocks`` the zero blocks added by block-count bucketing.
+    Mirror of :func:`encode_cache_stats`.
+    """
+    return dict(_decode_stats, cached_decoders=len(_decode_cache),
+                backend=_decode_backend)
+
+
+def reset_decode_cache_stats(clear_cache: bool = False) -> None:
+    for k in _decode_stats:
+        _decode_stats[k] = 0
+    if clear_cache:
+        _decode_cache.clear()
+
+
+def _decoder_key(fmt_name: str, p: EnecParams, block_elems: int) -> tuple:
+    """Compile-cache key sans block count.  The reference decoder keeps the
+    inverse-transform params ``(b, l)`` as traced per-block operands (they
+    never enter a shape), so one compiled program serves every searched
+    param set — the key carries only (n, m, L).  The Pallas kernel bakes
+    the whole tuple in."""
+    if _decode_backend == "pallas":
+        return (_decode_backend, fmt_name, p.astuple() + (p.l,), block_elems)
+    return (_decode_backend, fmt_name, (p.n, p.m, p.L), block_elems)
+
+
+def _decoder_for(fmt_name: str, p: EnecParams, block_elems: int, bucket: int):
+    key = _decoder_key(fmt_name, p, block_elems) + (bucket,)
+    fn = _decode_cache.get(key)
+    if fn is None:
+        if len(_decode_cache) >= 512:   # safety valve; never hit in practice
+            _decode_cache.clear()
+        _decode_stats["compiles"] += 1
+        fmt = FORMATS[fmt_name]
+        # decode reads (n, m, L) for shapes; (b, l) enter arithmetic only
+        # and the reference backend always overrides them with per-block
+        # vectors, so params differing in (b, l, expected_bits) share one
+        # compile there
+        p_norm = EnecParams(b=p.b, n=p.n, m=p.m, L=p.L, l=p.l)
+        if _decode_backend == "pallas":
+            from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
+            fn = kernel_ops.pipeline_decoder(fmt, p_norm, block_elems)
+        else:
+            fn = jax.jit(functools.partial(codec.decode_blocks,
+                                           n_elems=block_elems, fmt=fmt,
+                                           p=p_norm))
+        _decode_cache[key] = fn
+    else:
+        _decode_stats["cache_hits"] += 1
+    return fn
+
+
+def _decode_bucketed(streams: BlockStreams, fmt: FloatFormat, p: EnecParams,
+                     block_elems: int, b_vec=None, l_vec=None):
+    """One decode dispatch for flat (B, ...) block streams, compile-cached
+    on the bucketed block count (pad with zero blocks, slice the result).
+
+    ``b_vec`` / ``l_vec`` optionally carry per-block inverse-transform
+    params so blocks from tensors with different searched ``(b, l)`` share
+    the dispatch.
+    """
+    nblocks = streams.mask.shape[0]
+    bucket = _block_bucket(nblocks)
+    if _decode_backend != "pallas":
+        if b_vec is None:
+            b_vec = jnp.full((nblocks,), p.b, jnp.int32)
+        if l_vec is None:
+            l_vec = jnp.full((nblocks,), p.l, jnp.int32)
+    if bucket != nblocks:
+        _decode_stats["padded_blocks"] += bucket - nblocks
+        pad = bucket - nblocks
+        streams = jax.tree.map(
+            lambda a: jnp.concatenate(
+                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]), streams)
+        if b_vec is not None:
+            b_vec = jnp.concatenate([b_vec, jnp.full((pad,), p.b, jnp.int32)])
+            l_vec = jnp.concatenate([l_vec, jnp.full((pad,), p.l, jnp.int32)])
+    fn = _decoder_for(fmt.name, p, block_elems, bucket)
+    _decode_stats["dispatches"] += 1
+    bits = (fn(streams) if b_vec is None
+            else fn(streams, b_vec=b_vec, l_vec=l_vec))
+    return bits[:nblocks] if bucket != nblocks else bits
+
+
+_flat_streams = codec.flatten_blocks
+
+
+def _stack_dim(ct: "CompressedTensor") -> Optional[int]:
+    """Leading layer count of a stacked tensor, or ``None`` for a per-leaf
+    tensor (whose metadata already describes the whole array)."""
+    base = 3 if ct.shards > 1 else 2
+    return ct.streams.mask.shape[0] if ct.streams.mask.ndim == base + 1 \
+        else None
+
+
+# ---------------------------------------------------------------------------
 # single-array API
 # ---------------------------------------------------------------------------
 
@@ -299,18 +421,20 @@ def _raw_tensor(x, shards: int) -> CompressedTensor:
 
 
 def decompress_array(ct: CompressedTensor):
-    """Exact inverse of :func:`compress_array` (jit-compatible)."""
+    """Exact inverse of :func:`compress_array` (jit-compatible).
+
+    Rides the bucketed, compile-cached decoder of the batched pipeline, so
+    even per-leaf calls share compiled decode programs across tensors; use
+    :func:`decompress_stacked_many` to share the *dispatch* too.
+    """
     dtype = jnp.dtype(ct.dtype_str)
     if ct.mode == "const":
         value = ct.raw_bytes.view(dtype)[0]
         return jnp.broadcast_to(value, ct.shape)
     if ct.mode == "raw":
         return ct.raw_bytes.view(dtype).reshape(ct.shape)
-    streams = ct.streams
-    if ct.shards > 1:
-        streams = jax.tree.map(
-            lambda a: a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:]), streams)
-    bits = codec.decode_blocks(streams, ct.block_elems, ct.fmt, ct.params)
+    bits = _decode_bucketed(_flat_streams(ct.streams), ct.fmt, ct.params,
+                            ct.block_elems)
     return codec.from_blocks(bits, ct.shape, ct.fmt)
 
 
@@ -422,21 +546,81 @@ def compress_stacked(x, p: Optional[EnecParams] = None,
     return compress_stacked_many([x], p, block_elems, shards)[0]
 
 
-def decompress_stacked(ct: CompressedTensor):
-    """Inverse of :func:`compress_stacked`: one decode dispatch -> (L, ...)."""
-    s = ct.streams
-    n_layers = s.mask.shape[0]
-    flat = BlockStreams(
-        mask=s.mask.reshape(-1, s.mask.shape[-1]),
-        low=s.low.reshape(-1, s.low.shape[-1]),
-        high=s.high.reshape(-1, s.high.shape[-1]),
-        high_len=s.high_len.reshape(-1),
-        raw=s.raw.reshape(-1, s.raw.shape[-1]))
-    bits = codec.decode_blocks(flat, ct.block_elems, ct.fmt, ct.params)
+def _stacked_from_bits(ct: CompressedTensor, n_layers: int, bits):
+    """(L*B, N) decoded bits -> the dense ``(L,) + ct.shape`` stack."""
     per = int(np.prod(ct.shape))
     flat_layers = bits.reshape(n_layers, -1)[:, :per]
     return flat_layers.view(ct.fmt.float_dtype).reshape(
         (n_layers,) + ct.shape).astype(jnp.dtype(ct.dtype_str))
+
+
+def decompress_stacked(ct: CompressedTensor):
+    """Inverse of :func:`compress_stacked`: one decode dispatch -> (L, ...)."""
+    n_layers = ct.streams.mask.shape[0]
+    bits = _decode_bucketed(_flat_streams(ct.streams), ct.fmt, ct.params,
+                            ct.block_elems)
+    return _stacked_from_bits(ct, n_layers, bits)
+
+
+def decompress_stacked_many(cts: Sequence[Optional[CompressedTensor]]
+                            ) -> List[Optional[Any]]:
+    """Decompress many CompressedTensors with O(#buckets) decode dispatches
+    — the decode-side mirror of :func:`compress_stacked_many`.
+
+    Tensors sharing a decoder bucket ``(backend, fmt, (n, m, L),
+    block_elems, block-count bucket)`` are concatenated and decoded in ONE
+    jit dispatch; the inverse-transform params ``(b, l)`` ride as traced
+    per-block vectors, so tensors with *different* searched params share
+    the dispatch too (the Pallas backend bakes params in and buckets on the
+    full tuple instead).  Outputs are bit-identical to the per-leaf path.
+
+    Accepts any mix of per-leaf and stacked tensors plus ``const`` / ``raw``
+    / ``None`` entries: each output slot is exactly what
+    :func:`decompress_array` (per-leaf) or :func:`decompress_stacked`
+    (stacked) would return, or ``None`` for ``None`` inputs.
+    """
+    results: List[Optional[Any]] = [None] * len(cts)
+    groups: dict = {}   # decoder key -> list of plan dicts
+    for slot, ct in enumerate(cts):
+        if ct is None:
+            continue
+        if ct.mode != "enec":
+            results[slot] = decompress_array(ct)    # const/raw: no dispatch
+            continue
+        groups.setdefault(
+            _decoder_key(ct.fmt_name, ct.params, ct.block_elems), []
+        ).append(dict(slot=slot, ct=ct, stack=_stack_dim(ct),
+                      flat=_flat_streams(ct.streams)))
+
+    for members in groups.values():
+        if len(members) == 1:
+            flat = members[0]["flat"]
+        else:
+            flat = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                                *[m["flat"] for m in members])
+        p0 = members[0]["ct"].params
+        b_vec = l_vec = None
+        if _decode_backend != "pallas":
+            b_vec = jnp.concatenate(
+                [jnp.full((m["flat"].mask.shape[0],), m["ct"].params.b,
+                          jnp.int32) for m in members])
+            l_vec = jnp.concatenate(
+                [jnp.full((m["flat"].mask.shape[0],), m["ct"].params.l,
+                          jnp.int32) for m in members])
+        bits = _decode_bucketed(flat, members[0]["ct"].fmt, p0,
+                                members[0]["ct"].block_elems,
+                                b_vec=b_vec, l_vec=l_vec)
+        offset = 0
+        for m in members:
+            nb = m["flat"].mask.shape[0]
+            bits_m = bits[offset:offset + nb]
+            offset += nb
+            ct = m["ct"]
+            results[m["slot"]] = (
+                codec.from_blocks(bits_m, ct.shape, ct.fmt)
+                if m["stack"] is None
+                else _stacked_from_bits(ct, m["stack"], bits_m))
+    return results
 
 
 def slice_stacked(ct: CompressedTensor, index: int) -> CompressedTensor:
@@ -445,12 +629,12 @@ def slice_stacked(ct: CompressedTensor, index: int) -> CompressedTensor:
         ct, streams=jax.tree.map(lambda a: a[index], ct.streams))
 
 
-# jit'd entry points for the checkpoint-restore path: CompressedTensor is a
-# pytree whose codec metadata is static, so jax.jit specializes one compiled
-# decode per (fmt, params, shape) — restoring a 2N-layer model decompresses
-# through a handful of compiled programs instead of thousands of eager
-# dispatches, and the decode runs where the streams live (device), never on
-# the host.
+# Legacy jit'd entry points.  decompress_array / decompress_stacked now ride
+# the bucketed decoder cache directly (the decode runs where the streams
+# live, never on the host), and the batched consumers (checkpoint restore,
+# whole-tree materialization) group tensors into shared dispatches via
+# decompress_stacked_many — these aliases remain for callers that want one
+# fused program around the whole inverse (decode + reshape + astype).
 decompress_on_device = jax.jit(decompress_array)
 decompress_stacked_on_device = jax.jit(decompress_stacked)
 
@@ -539,9 +723,15 @@ def compress_tree(tree, shared_params: Optional[EnecParams] = None,
 
 
 def decompress_tree(ctree):
-    return jax.tree.map(
-        decompress_array, ctree,
-        is_leaf=lambda x: isinstance(x, CompressedTensor))
+    """Inverse of :func:`compress_tree` with O(#decoder buckets) decode
+    dispatches (leaves sharing a bucket decode together)."""
+    flat, treedef = jax.tree_util.tree_flatten(
+        ctree, is_leaf=lambda x: isinstance(x, CompressedTensor))
+    slots = [i for i, l in enumerate(flat) if isinstance(l, CompressedTensor)]
+    outs = decompress_stacked_many([flat[i] for i in slots])
+    for i, out in zip(slots, outs):
+        flat[i] = out
+    return jax.tree_util.tree_unflatten(treedef, flat)
 
 
 def precompute_wire_bytes(cts: Sequence[CompressedTensor]) -> None:

@@ -94,8 +94,15 @@ def encode_blocks(bits, fmt: FloatFormat, p: EnecParams,
 
 
 def decode_blocks(streams: BlockStreams, n_elems: int, fmt: FloatFormat,
-                  p: EnecParams):
-    """Inverse of :func:`encode_blocks` -> (B, N) unsigned int view."""
+                  p: EnecParams, b_vec=None, l_vec=None):
+    """Inverse of :func:`encode_blocks` -> (B, N) unsigned int view.
+
+    Shapes are static in (N, p.n, p.m, p.L); the inverse transform's
+    ``(b, l)`` only enter the arithmetic, so ``b_vec`` / ``l_vec`` (traced
+    (B,) per-block vectors) can override the static ``p.b`` / ``p.l`` — the
+    batched decode pipeline uses this to decode tensors with different
+    searched params in one compiled dispatch.
+    """
     nblocks = streams.mask.shape[0]
     g = n_elems // p.L
 
@@ -114,11 +121,31 @@ def decode_blocks(streams: BlockStreams, n_elems: int, fmt: FloatFormat,
     gathered = jnp.where(anom[:, :, None], gathered, jnp.uint16(0))
 
     y = (y_low | (gathered << p.m)).reshape(nblocks, n_elems)
-    exp = transform.inverse(y, p.b, p.n, p.l)
+    b_sel = p.b if b_vec is None else b_vec
+    l_sel = p.l if l_vec is None else l_vec
+    exp = transform.inverse(y, b_sel, p.n, l_sel)
 
     raw = bitio.unpack_fixed(streams.raw, n_elems, fmt.raw_bits,
                              out_dtype=fmt.uint_dtype)
     return combine_fields(exp.astype(fmt.uint_dtype), raw, fmt)
+
+
+def flatten_blocks(s: BlockStreams) -> BlockStreams:
+    """Collapse every leading ``(L, [shards,] B)`` stream layout to one
+    flat block axis — the layout the per-block decoder consumes.  The
+    single definition keeps the device pipeline, the Pallas kernel entry,
+    and the host wire path on one layout contract (works on numpy arrays
+    too).  The block count is explicit (not -1): the high stream has zero
+    width when m == n."""
+    nblocks = 1
+    for d in s.mask.shape[:-1]:
+        nblocks *= int(d)
+    return BlockStreams(
+        mask=s.mask.reshape(nblocks, s.mask.shape[-1]),
+        low=s.low.reshape(nblocks, s.low.shape[-1]),
+        high=s.high.reshape(nblocks, s.high.shape[-1]),
+        high_len=s.high_len.reshape(nblocks),
+        raw=s.raw.reshape(nblocks, s.raw.shape[-1]))
 
 
 # ---------------------------------------------------------------------------

@@ -32,13 +32,24 @@ def forward(x, b, n: int):
     return (bb - x) & mod_mask
 
 
-def inverse(y, b: int, n: int, l: int):
+def inverse(y, b, n: int, l):
     """Exact inverse given the minimum exponent ``l`` seen at encode time.
 
     ``x = l + ((b - y - l) mod 2**n)`` — picks the unique representative of
     the residue class lying in ``[l, l + 2**n)``, which contains ``[l, h]``.
+
+    Like :func:`forward`, ``b`` and ``l`` may be static ints or traced
+    arrays broadcast against leading axes of ``y``: the batched decoder
+    passes per-block vectors so blocks from tensors with different
+    ``(b, l)`` share one compiled decode dispatch.
     """
     y = jnp.asarray(y)
     mod_mask = jnp.asarray((1 << n) - 1, y.dtype)
-    c = jnp.asarray((b - l) & ((1 << n) - 1), y.dtype)
-    return jnp.asarray(l, y.dtype) + ((c - y) & mod_mask)
+    bb = jnp.asarray(b, y.dtype)
+    ll = jnp.asarray(l, y.dtype)
+    c = (bb - ll) & mod_mask
+    if c.ndim:
+        c = c.reshape(c.shape + (1,) * (y.ndim - c.ndim))
+    if ll.ndim:
+        ll = ll.reshape(ll.shape + (1,) * (y.ndim - ll.ndim))
+    return ll + ((c - y) & mod_mask)

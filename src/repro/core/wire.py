@@ -160,15 +160,10 @@ def iter_frames(buf):
 
 def _flat_streams(ct: CompressedTensor) -> BlockStreams:
     """Host copies of the streams with every leading (stack/shard) dim
-    flattened into the block dim."""
+    flattened into the block dim (shared layout contract:
+    ``codec.flatten_blocks``)."""
     s = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), ct.streams)
-    rows = int(np.prod(s.mask.shape[:-1], dtype=np.int64))
-    return BlockStreams(
-        mask=s.mask.reshape(rows, s.mask.shape[-1]),
-        low=s.low.reshape(rows, s.low.shape[-1]),
-        high=s.high.reshape(rows, s.high.shape[-1]),
-        high_len=s.high_len.reshape(rows),
-        raw=s.raw.reshape(rows, s.raw.shape[-1]))
+    return codec.flatten_blocks(s)
 
 
 def to_wire(ct: CompressedTensor, *, stacked: bool = False) -> bytes:

@@ -1,19 +1,29 @@
 """ENEC block decompression as a Pallas TPU kernel.
 
-One 16,384-element block per grid step; every stream tile lives in VMEM
-(mask 128 B + low N·m/8 + high N·(n-m)/8 + raw N·r/8 ≈ 30 KB for BF16 at
-(n=6, m=3) — comfortably double-buffered by Pallas against the ~16 MB VMEM).
+Up to ``_STEP_ELEM_BUDGET`` block elements per grid step (multiple blocks
+for small block sizes — amortizes grid overhead on small tensors); every
+stream tile lives in VMEM (mask 128 B + low N·m/8 + high N·(n-m)/8 +
+raw N·r/8 ≈ 30 KB for BF16 at (n=6, m=3) — comfortably double-buffered by
+Pallas against the ~16 MB VMEM).
 
 TPU adaptations inside the body (DESIGN.md §2):
   * prefix sum over the anomaly mask  -> IDD-Scan (MXU triangular matmul)
-  * reverse gather of anomalous high bits -> one-hot MXU matmul, chunked in
-    128-group slabs so the one-hot slab is a (128, G) f32 tile (512 KB max)
-    instead of a (G, G) monolith
+  * reverse gather of anomalous high bits -> segment-local one-hot MXU
+    matmul: destination segment s only ever reads the 128 rank-ordered rows
+    starting at its exclusive anomaly offset (the IDD-scan's stage-2 row
+    offset), so each segment is one (128, 128) one-hot matmul — O(G·128·L)
+    MXU FLOPs instead of the chunked (128, G) one-hot's O(G²·L)
   * exponent inverse mapping -> branch-free linear transform (VPU add/and)
   * bit-unpacking -> static unrolled halving un-fold (slices + shift + or)
 
 The pure-jnp oracle is ``repro.core.codec.decode_blocks`` (see ref.py); the
-kernel is verified element-exact against it across shape/dtype/param sweeps.
+kernel is verified element-exact against it across shape/dtype/param sweeps
+(including all-anomaly, zero-anomaly, and tail-padded blocks).
+
+Streams may carry the batched pipeline's stacked ``(L, [shards,] B, ...)``
+leading layout — it is flattened to one block axis on entry, so
+``kernels.ops.pipeline_decoder`` drives whole-stack decode exactly like
+``pipeline_encoder`` does for encode.
 """
 from __future__ import annotations
 
@@ -29,7 +39,12 @@ from repro.core.params import EnecParams
 
 from .idd_scan import scan_2d
 
-GATHER_CHUNK = 128
+GATHER_SEG = 128
+# elements decoded per grid step: one 16,384-element block, or up to 8
+# smaller blocks unrolled in one step so tiny tensors don't pay one grid
+# step (and its stream-tile DMA round) per block
+_STEP_ELEM_BUDGET = 16384
+_MAX_BLOCKS_PER_STEP = 8
 
 
 def _mask_to_bits(mask_bytes, g: int):
@@ -47,17 +62,30 @@ def _exclusive_rank(anom_i32, g: int):
     return incl.astype(jnp.int32) - anom_i32
 
 
-def _onehot_gather(high_dense_f32, rank, anom_i32, g: int, l: int):
-    """gathered[gr] = high_dense[rank[gr]] if anom[gr] else 0 — on the MXU."""
-    chunk = min(GATHER_CHUNK, g)
-    r_iota = jax.lax.broadcasted_iota(jnp.int32, (chunk, g), 1)
+def _segment_gather(high_dense_f32, rank, anom_i32, g: int, l: int):
+    """gathered[gr] = high_dense[rank[gr]] if anom[gr] else 0 — on the MXU.
+
+    The exclusive ranks of the groups in segment ``s`` (128 destinations)
+    all lie in ``[start, start + 127]`` with ``start = rank[s * 128]`` —
+    the segment's exclusive anomaly offset, which the IDD-scan's stage-2
+    row propagation already materialized.  One dynamic 128-row slice of the
+    rank-ordered source plus one (128, 128) one-hot matmul therefore covers
+    every destination in the segment, and MXU work scales with the group
+    count instead of its square.  ``start <= s * 128`` (at most one anomaly
+    per preceding group), so the slice never runs off the end.
+    """
+    seg = min(GATHER_SEG, g)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (seg, seg), 1)
     outs = []
-    for c in range(0, g, chunk):
-        rk = jax.lax.dynamic_slice_in_dim(rank, c, chunk)
-        am = jax.lax.dynamic_slice_in_dim(anom_i32, c, chunk)
-        onehot = ((rk[:, None] == r_iota) & (am[:, None] > 0)).astype(jnp.float32)
+    for c in range(0, g, seg):
+        rk = jax.lax.dynamic_slice_in_dim(rank, c, seg)
+        am = jax.lax.dynamic_slice_in_dim(anom_i32, c, seg)
+        start = rk[0]
+        src = jax.lax.dynamic_slice_in_dim(high_dense_f32, start, seg)
+        onehot = (((rk - start)[:, None] == iota) &
+                  (am[:, None] > 0)).astype(jnp.float32)
         outs.append(jax.lax.dot_general(
-            onehot, high_dense_f32, (((1,), (0,)), ((), ())),
+            onehot, src, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32))
     return jnp.concatenate(outs, axis=0)  # (G, L) f32, exact (< 2**m values)
 
@@ -74,7 +102,7 @@ def decode_block_body(mask_b, low_b, high_b, raw_b, *, n_elems: int,
     if p.n > p.m:
         high_dense = bitio.unpack_fixed(high_b[None, :], n_elems, p.n - p.m)[0]
         high_dense = high_dense.reshape(g, p.L).astype(jnp.float32)
-        gathered = _onehot_gather(high_dense, rank, anom, g, p.L)
+        gathered = _segment_gather(high_dense, rank, anom, g, p.L)
         gathered = gathered.astype(jnp.uint16).reshape(n_elems)
         y = y_low | (gathered << p.m)
 
@@ -85,32 +113,56 @@ def decode_block_body(mask_b, low_b, high_b, raw_b, *, n_elems: int,
 
 
 def _decode_kernel(mask_ref, low_ref, high_ref, raw_ref, out_ref, *,
-                   n_elems, fmt, p):
-    out_ref[0] = decode_block_body(
-        mask_ref[0], low_ref[0], high_ref[0], raw_ref[0],
-        n_elems=n_elems, fmt=fmt, p=p)
+                   n_elems, fmt, p, block_step):
+    for j in range(block_step):
+        out_ref[j] = decode_block_body(
+            mask_ref[j], low_ref[j], high_ref[j], raw_ref[j],
+            n_elems=n_elems, fmt=fmt, p=p)
+
+
+def blocks_per_step(nblocks: int, n_elems: int) -> int:
+    """Largest power-of-two block count per grid step that divides the
+    total, stays within the per-step element budget, and bounds the body
+    unroll — the batched pipeline's bucketed counts (pow2 / 64-multiples)
+    always divide cleanly."""
+    bs = 1
+    while (bs * 2 <= _MAX_BLOCKS_PER_STEP and nblocks % (bs * 2) == 0
+           and bs * 2 * n_elems <= _STEP_ELEM_BUDGET):
+        bs *= 2
+    return bs
 
 
 def decode_blocks_pallas(streams: codec.BlockStreams, n_elems: int,
                          fmt: FloatFormat, p: EnecParams, *,
-                         interpret: bool = True):
-    """Pallas counterpart of ``codec.decode_blocks`` (same signature/layout)."""
+                         interpret=None):
+    """Pallas counterpart of ``codec.decode_blocks`` (same layout).
+
+    Accepts flat ``(B, ...)`` streams or the stacked ``(L, [shards,] B,
+    ...)`` pipeline layout (flattened on entry); returns ``(total_blocks,
+    n_elems)`` decoded bits either way.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if streams.mask.ndim > 2:  # stacked pipeline layout: flatten block dims
+        streams = codec.flatten_blocks(streams)
     nblocks = streams.mask.shape[0]
     widths = codec.stream_shapes(n_elems, fmt, p)
+    bs = blocks_per_step(nblocks, n_elems)
 
     def spec(nbytes):
-        return pl.BlockSpec((1, max(nbytes, 1)), lambda i: (i, 0))
+        return pl.BlockSpec((bs, max(nbytes, 1)), lambda i: (i, 0))
 
     high = streams.high
     if widths["high"] == 0:  # m == n: no high stream; feed a dummy byte
         high = jnp.zeros((nblocks, 1), jnp.uint8)
 
     fn = pl.pallas_call(
-        functools.partial(_decode_kernel, n_elems=n_elems, fmt=fmt, p=p),
-        grid=(nblocks,),
+        functools.partial(_decode_kernel, n_elems=n_elems, fmt=fmt, p=p,
+                          block_step=bs),
+        grid=(nblocks // bs,),
         in_specs=[spec(widths["mask"]), spec(widths["low"]),
                   spec(widths["high"]), spec(widths["raw"])],
-        out_specs=pl.BlockSpec((1, n_elems), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((bs, n_elems), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nblocks, n_elems), fmt.uint_dtype),
         interpret=interpret,
     )

@@ -70,11 +70,16 @@ def _idd_scan_kernel(x_ref, o_ref, *, rows):
     o_ref[0] = scan_2d(mat).reshape(rows * LANE).astype(o_ref.dtype)
 
 
-def idd_scan(x, *, interpret: bool = True):
+def idd_scan(x, *, interpret=None):
     """Batched inclusive prefix sum: x (B, N) -> (B, N) int32, N % 128 == 0.
 
     One batch row per grid step; the (rows, 128) working set lives in VMEM.
+    ``interpret=None`` resolves like every other kernel entry: native on
+    TPU, interpreter mode elsewhere (the seed hard-defaulted to ``True``,
+    which silently ran the interpreter on TPU too).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b, n = x.shape
     assert n % LANE == 0, n
     rows = n // LANE

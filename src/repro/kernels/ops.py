@@ -31,11 +31,24 @@ def _interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
-def idd_scan(x, use_pallas: bool = True):
-    """Batched inclusive prefix sum (B, N) -> (B, N) int32."""
+def _idd_scan_jit(x, use_pallas: bool):
     if not use_pallas:
         return ref.idd_scan_ref(x)
     return _idd_scan(x, interpret=_interpret())
+
+
+def idd_scan(x, use_pallas=None):
+    """Batched inclusive prefix sum (B, N) -> (B, N) int32.
+
+    ``use_pallas=None`` (default) defers to the pipeline's backend
+    selection (``core.api.set_encode_backend``), like the codec entries the
+    batched pipeline caches — the seed hard-defaulted to the Pallas path in
+    interpreter mode regardless of backend.
+    """
+    if use_pallas is None:
+        from repro.core import api as _api  # lazy: avoids import cycle
+        use_pallas = _api.encode_cache_stats()["backend"] == "pallas"
+    return _idd_scan_jit(x, use_pallas)
 
 
 def encode_blocks(bits, fmt: FloatFormat, p: EnecParams,
@@ -63,6 +76,21 @@ def decode_blocks(streams: codec.BlockStreams, n_elems: int,
         return ref.decode_blocks_ref(streams, n_elems, fmt, p)
     return decode_blocks_pallas(streams, n_elems, fmt, p,
                                 interpret=_interpret())
+
+
+def pipeline_decoder(fmt: FloatFormat, p: EnecParams, n_elems: int,
+                     use_pallas: bool = True):
+    """Decoder callable for the batched decompression pipeline (core.api).
+
+    Mirror of :func:`pipeline_encoder`: ``core.api`` jit-caches the result
+    per (fmt, params, block-count bucket), so the Pallas kernel drives the
+    stacked single-dispatch decode path the same way the reference codec
+    does.  The kernel accepts the stacked ``(L, B)`` stream layout directly
+    (flattened on entry) and bakes ``(b, l)`` in statically, so the cache
+    keys the full param tuple on this backend.
+    """
+    return jax.jit(functools.partial(decode_blocks, n_elems=n_elems,
+                                     fmt=fmt, p=p, use_pallas=use_pallas))
 
 
 def decompress_matmul(x, ct: CompressedTensor, k: int, n: int,

@@ -41,6 +41,7 @@ def _restore_params(args, model, mode):
     """--ckpt: weights come from the checkpoint, never from init."""
     from repro.checkpoint.ckpt import CheckpointManager
     from repro.core import wire
+    from repro.core.api import decode_cache_stats, reset_decode_cache_stats
 
     mgr = CheckpointManager(args.ckpt)
     manifest = mgr.manifest()
@@ -50,6 +51,7 @@ def _restore_params(args, model, mode):
     prefix = "params" if any(n.startswith("params/") for n in names) else ""
     like = jax.eval_shape(model.init, jax.random.key(0))
     wire.reset_transfer_stats()
+    reset_decode_cache_stats()
     t0 = time.perf_counter()
     params, _ = mgr.load_for_serving(like, mode=mode, prefix=prefix,
                                      min_bytes=args.min_bytes,
@@ -57,10 +59,12 @@ def _restore_params(args, model, mode):
     jax.block_until_ready(jax.tree.leaves(params))
     dt = time.perf_counter() - t0
     ts = wire.transfer_stats()
+    dst = decode_cache_stats()
     print(f"[launch.serve] restored step {manifest['step']} from "
           f"{args.ckpt} in {dt:.2f}s "
           f"(h2d {ts['h2d_bytes'] / 1e6:.1f} MB compressed, "
-          f"ratio {manifest.get('ratio', 0):.3f}x)")
+          f"ratio {manifest.get('ratio', 0):.3f}x, "
+          f"{dst['dispatches']} decode dispatches)")
     return params
 
 

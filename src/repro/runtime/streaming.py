@@ -41,7 +41,7 @@ from repro.core.api import (SUPPORTED_FLOAT_DTYPES, CompressedTensor,
 from repro.core.params import EnecParams
 from repro.runtime.weights import (DenseWeight, FusedWeight,  # noqa: F401
                                    StreamedWeight, WeightHandle, is_handle,
-                                   resolve)
+                                   materialize_full_many, resolve)
 
 MIN_STREAM_BYTES = 1 << 20  # 1 MiB
 STREAM_SHARDS = 16          # production TP width (divisors also work)
@@ -252,6 +252,22 @@ def decompress_sliced(p_sliced):
     ``decompressor`` hook's behaviour — the model now does this itself via
     ``runtime.weights.resolve``; kept for direct/manual use)."""
     return resolve(p_sliced)
+
+
+def materialize_weight_tree(tree):
+    """Inverse of :func:`assign_weight_modes` /
+    :func:`compress_params_for_streaming`: every handle back to its dense
+    ``(L, ...)`` leaf, batched through the decode pipeline so the whole
+    tree costs O(#decoder buckets) decode dispatches instead of one per
+    leaf (or per layer) — bit-identical to materializing each handle alone
+    (ENEC is lossless and the batched decode is dispatch-sharing only).
+    """
+    flat, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_handle)
+    slots = [i for i, leaf in enumerate(flat) if is_handle(leaf)]
+    outs = materialize_full_many([flat[i] for i in slots])
+    for i, out in zip(slots, outs):
+        flat[i] = out
+    return jax.tree_util.tree_unflatten(treedef, flat)
 
 
 def abstract_streamed_params(cfg, p: EnecParams, *,

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.api import (MATMUL_TILE, CompressedTensor, decompress_array,
-                            decompress_stacked_on_device,
+                            decompress_stacked, decompress_stacked_many,
                             untile_matmul_weight)
 from repro.kernels.ref import tiled_matmul_ref
 
@@ -156,6 +156,22 @@ def handle_from_spec(spec: dict, ct: CompressedTensor) -> WeightHandle:
     raise ValueError(f"unknown handle spec kind {kind!r}")
 
 
+def finish_materialize(handle, w_stacked):
+    """Stacked decode result -> the handle's original dense ``(L, ...)``
+    leaf (un-permute / un-tile the storage layout)."""
+    if isinstance(handle, StreamedWeight):
+        w = jnp.moveaxis(w_stacked, 1, 1 + handle.tp_axis)
+        return w.astype(jnp.dtype(handle.dtype_str))
+    if isinstance(handle, FusedWeight):
+        t = MATMUL_TILE
+        k, n = handle.k, handle.n
+        kp, np_ = -(-k // t) * t, -(-n // t) * t
+        tiles = w_stacked.reshape(w_stacked.shape[0], np_ // t, kp // t, t, t)
+        w = tiles.transpose(0, 2, 3, 1, 4).reshape(w_stacked.shape[0], kp, np_)
+        return w[:, :k, :n].astype(jnp.dtype(handle.dtype_str))
+    raise TypeError(f"not a compressed handle: {type(handle).__name__}")
+
+
 def materialize_full(handle):
     """Materialize a STACKED handle to its original dense ``(L, ...)`` leaf
     in one decode dispatch (``materialize()`` operates on per-layer slices;
@@ -163,19 +179,18 @@ def materialize_full(handle):
     training tree from serving-layout records)."""
     if isinstance(handle, DenseWeight):
         return handle.w
-    if isinstance(handle, StreamedWeight):
-        w_perm = decompress_stacked_on_device(handle.ct)
-        w = jnp.moveaxis(w_perm, 1, 1 + handle.tp_axis)
-        return w.astype(jnp.dtype(handle.dtype_str))
-    if isinstance(handle, FusedWeight):
-        t = MATMUL_TILE
-        k, n = handle.k, handle.n
-        kp, np_ = -(-k // t) * t, -(-n // t) * t
-        flat = decompress_stacked_on_device(handle.ct)
-        tiles = flat.reshape(flat.shape[0], np_ // t, kp // t, t, t)
-        w = tiles.transpose(0, 2, 3, 1, 4).reshape(flat.shape[0], kp, np_)
-        return w[:, :k, :n].astype(jnp.dtype(handle.dtype_str))
-    raise TypeError(f"not a handle: {type(handle).__name__}")
+    return finish_materialize(handle, decompress_stacked(handle.ct))
+
+
+def materialize_full_many(handles):
+    """:func:`materialize_full` over many handles with O(#decoder buckets)
+    decode dispatches — handles sharing a bucket decode in one concatenated
+    dispatch via ``core.api.decompress_stacked_many`` (batched checkpoint
+    restore, whole-tree materialization)."""
+    decs = decompress_stacked_many(
+        [None if isinstance(h, DenseWeight) else h.ct for h in handles])
+    return [h.w if isinstance(h, DenseWeight) else finish_materialize(h, d)
+            for h, d in zip(handles, decs)]
 
 
 def resolve(tree):

@@ -36,7 +36,9 @@ def _blocks_for(fmt_key, n_elems, nblocks, seed=0):
 def test_idd_scan_matches_cumsum(shape):
     rng = np.random.default_rng(shape[1])
     x = jnp.asarray((rng.random(shape) < 0.3).astype(np.int32))
-    np.testing.assert_array_equal(np.asarray(ops.idd_scan(x)),
+    # use_pallas=True pins the kernel path (the default defers to the
+    # pipeline backend selection, which is "reference" here)
+    np.testing.assert_array_equal(np.asarray(ops.idd_scan(x, use_pallas=True)),
                                   np.asarray(ref.idd_scan_ref(x)))
 
 
