@@ -7,7 +7,7 @@ import functools
 import jax
 import numpy as np
 
-from repro.core import BF16, codec, compress_array, search_for_array
+from repro.core import BF16, codec, default_codec, search_for_array
 from repro.data.synthetic_weights import WeightSetSpec, generate
 
 from .common import time_fn
@@ -25,7 +25,7 @@ def run():
         bits = codec.to_blocks(x, BF16, block)
         enc = jax.jit(functools.partial(codec.encode_blocks, fmt=BF16, p=p))
         t = time_fn(enc, bits, iters=3)
-        ct = compress_array(x, p, block_elems=block)
+        ct = default_codec().compress_array(x, p, block_elems=block)
         rows.append((f"fig11/blocksize_{block}", t * 1e6,
                      f"GBps={host.nbytes / t / 1e9:.3f};"
                      f"ratio={ct.ratio():.3f}"))
@@ -34,6 +34,6 @@ def run():
     for mb in (1, 2, 4, 8, 16):
         spec = dataclasses.replace(base, n_elems=mb << 19)  # bf16: 2 B/elem
         xi = generate(spec)
-        ct = compress_array(xi)
+        ct = default_codec().compress_array(xi)
         rows.append((f"table6/input_{mb}MB", 0.0, f"ratio={ct.ratio():.3f}"))
     return rows

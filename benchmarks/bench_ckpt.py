@@ -34,8 +34,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs import get_smoke_config
-from repro.core import wire
-from repro.core.api import decode_cache_stats, reset_decode_cache_stats
+from repro.core import Codec
 from repro.models import build_model
 from repro.runtime.streaming import assign_weight_modes
 
@@ -58,9 +57,11 @@ def run():
     raw_mb = sum(l.size * l.dtype.itemsize
                  for l in jax.tree.leaves(tree)) / 1e6
 
+    # the bench's own codec: counters below are scoped to this instance
+    codec = Codec()
     with tempfile.TemporaryDirectory() as d:
         mgr = CheckpointManager(d, serving_layout="fused",
-                                serving_min_bytes=1024)
+                                serving_min_bytes=1024, codec=codec)
         dt, _ = _once(lambda: mgr.save(1, tree, blocking=True))
         manifest = mgr.manifest()
         rows.append(("ckpt/save", dt * 1e6,
@@ -68,28 +69,36 @@ def run():
                      f"packs={len(manifest['packs'])}"))
 
         n_records = len(manifest["leaves"])
-        reset_decode_cache_stats()
+        codec.reset_decode_cache_stats()
         dt, _ = _once(lambda: mgr.load(tree))
-        st = decode_cache_stats()
+        st = codec.decode_cache_stats()
+        # plan/execute cross-check: the loader's DecodePlan is the dispatch
+        # count — the O(#buckets) restore guarantee as data, not folklore
+        plan_buckets = len(mgr.last_decode_plan.buckets)
+        assert st["dispatches"] == plan_buckets, (
+            f"load dispatches {st['dispatches']} != plan buckets "
+            f"{plan_buckets}")
         rows.append(("ckpt/load", dt * 1e6,
                      f"mb_s={raw_mb / dt:.1f};records={n_records};"
                      f"decode_dispatches={st['dispatches']};"
-                     f"decode_compiles={st['compiles']}"))
+                     f"decode_compiles={st['compiles']};"
+                     f"plan_buckets={plan_buckets}"))
 
         # v1-style dense-inflate restore-to-serve: dense load + re-compress
         dt, _ = _once(lambda: assign_weight_modes(
-            mgr.load(tree)[0]["params"], mode="fused", min_bytes=1024))
+            mgr.load(tree)[0]["params"], mode="fused", min_bytes=1024,
+            codec=codec))
         rows.append(("ckpt/restore_v1_dense_inflate", dt * 1e6,
                      f"s={dt:.3f}"))
 
         # v2 direct restore: records -> handles, compressed bytes only
         like = jax.eval_shape(model.init, jax.random.key(0))
-        wire.reset_transfer_stats()
-        reset_decode_cache_stats()
+        codec.reset_transfer_stats()
+        codec.reset_decode_cache_stats()
         dt, _ = _once(lambda: mgr.load_for_serving(
             like, mode="fused", prefix="params", min_bytes=1024))
-        ts = wire.transfer_stats()
-        st = decode_cache_stats()
+        ts = codec.transfer_stats()
+        st = codec.decode_cache_stats()
         rows.append(("ckpt/restore_v2_to_handles", dt * 1e6,
                      f"s={dt:.3f};h2d_mb={ts['h2d_bytes'] / 1e6:.2f};"
                      f"dense_mb={raw_mb / 2:.2f};"

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import (FORMATS, compress_array, expected_ratio,
+from repro.core import (FORMATS, default_codec, expected_ratio,
                         search_for_array)
 from repro.data.synthetic_weights import PAPER_MODELS, generate
 
@@ -20,14 +20,14 @@ def run():
         host = np.asarray(jax.device_get(x))
         t = time_fn(lambda: search_for_array(host, fmt), iters=1, warmup=0)
         p = search_for_array(host, fmt)
-        ct = compress_array(x, p)
+        ct = default_codec().compress_array(x, p)
         rows.append((f"table4/params/{spec.name}/{spec.dtype}", t * 1e6,
                      f"(b,n,m,L)={p.astuple()};formula_CR="
                      f"{expected_ratio(p, fmt):.3f};achieved_CR="
                      f"{ct.ratio():.3f}"))
         # beyond-paper: joint search (DESIGN.md §8)
         pj = search_for_array(host, fmt, mode="joint")
-        ctj = compress_array(x, pj)
+        ctj = default_codec().compress_array(x, pj)
         rows.append((f"table4/params_joint/{spec.name}", 0.0,
                      f"(b,n,m,L)={pj.astuple()};achieved_CR="
                      f"{ctj.ratio():.3f}"))

@@ -32,13 +32,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api as enec_api
+from repro.core import Codec
 from repro.core import codec, params as params_mod
 from repro.core.api import CompressedTensor
 from repro.core.dtypes import FORMATS, format_for
 from repro.runtime.streaming import (StreamedWeight,
                                      compress_params_for_streaming,
-                                     materialize_weight_tree)
+                                     materialize_weight_tree,
+                                     streaming_encode_plan)
+
+# the bench's own codec instance: every dispatch/compile counter below is
+# scoped to it, so other suites in the same process cannot perturb the
+# numbers (the v1 API property this PR makes assertable)
+CODEC = Codec()
 
 # real layer counts, widths scaled for a CPU bench.  Layer slices of 1-2
 # blocks put the run in the dispatch/round-trip-bound regime that the NPU
@@ -138,7 +144,8 @@ def legacy_compress_tree(params, shards: int = SHARDS):
 
 
 def stacked_compress_tree(params, shards: int = SHARDS):
-    return compress_params_for_streaming(params, min_bytes=1024, shards=shards)
+    return compress_params_for_streaming(params, min_bytes=1024,
+                                         shards=shards, codec=CODEC)
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +184,7 @@ def legacy_decompress_tree(streamed):
 
 
 def stacked_decompress_tree(streamed):
-    return materialize_weight_tree(streamed)
+    return materialize_weight_tree(streamed, codec=CODEC)
 
 
 # ---------------------------------------------------------------------------
@@ -188,8 +195,8 @@ def _clear_all_caches():
     jax.clear_caches()
     _legacy_jit_encode.cache_clear()
     _legacy_jit_decode.cache_clear()
-    enec_api.reset_encode_cache_stats(clear_cache=True)
-    enec_api.reset_decode_cache_stats(clear_cache=True)
+    CODEC.reset_encode_cache_stats(clear_cache=True)
+    CODEC.reset_decode_cache_stats(clear_cache=True)
 
 
 def _time_once(fn, params) -> float:
@@ -220,7 +227,7 @@ def _verify_lossless(params, streamed) -> None:
         streamed, is_leaf=lambda x: isinstance(x, StreamedWeight))
     for x, sw in zip(flat_in, flat_out):
         assert isinstance(sw, StreamedWeight), "leaf unexpectedly dense"
-        dec = jnp.moveaxis(enec_api.decompress_stacked(sw.ct), 1,
+        dec = jnp.moveaxis(CODEC.decompress_stacked(sw.ct), 1,
                            1 + sw.tp_axis)
         np.testing.assert_array_equal(
             np.asarray(jax.device_get(x)).view(np.uint16),
@@ -252,10 +259,17 @@ def run():
         legacy_warm = _time_warm(legacy_compress_tree, params)
         _clear_all_caches()
         stacked_warm = _time_warm(stacked_compress_tree, params)
-        # dispatch/compile accounting for ONE whole-tree compression
+        # dispatch/compile accounting for ONE whole-tree compression —
+        # and the plan/execute cross-check: the EncodePlan's bucket count
+        # must equal the dispatches the cache counters measured
         _clear_all_caches()
         jax.block_until_ready(stacked_compress_tree(params))
-        st = enec_api.encode_cache_stats()
+        st = CODEC.encode_cache_stats()
+        plan = streaming_encode_plan(params, min_bytes=1024, shards=SHARDS,
+                                     codec=CODEC)
+        assert st["dispatches"] == len(plan.buckets), (
+            f"encode dispatches {st['dispatches']} != plan buckets "
+            f"{len(plan.buckets)}")
 
         n_leaves = len(jax.tree_util.tree_leaves(params))
         n_layers = spec["n_layers"]
@@ -263,7 +277,8 @@ def run():
             (f"pipeline_tree/{arch}/legacy_cold", legacy_cold * 1e6,
              f"{n_leaves * n_layers}_encode_dispatches"),
             (f"pipeline_tree/{arch}/stacked_cold", stacked_cold * 1e6,
-             f"{st['dispatches']}_encode_dispatches_{st['compiles']}_compiles"),
+             f"{st['dispatches']}_encode_dispatches_{st['compiles']}_compiles"
+             f"_{len(plan.buckets)}_plan_buckets"),
             (f"pipeline_tree/{arch}/legacy_warm", legacy_warm * 1e6, ""),
             (f"pipeline_tree/{arch}/stacked_warm", stacked_warm * 1e6, ""),
             (f"pipeline_tree/{arch}/speedup_cold", 0.0,
@@ -285,14 +300,21 @@ def run():
         _clear_all_caches()
         jax.block_until_ready(
             jax.tree.leaves(stacked_decompress_tree(streamed)))
-        dst = enec_api.decode_cache_stats()
+        dst = CODEC.decode_cache_stats()
+        dplan = CODEC.plan_decode(
+            [leaf.ct for leaf in jax.tree.leaves(
+                streamed, is_leaf=lambda x: isinstance(x, StreamedWeight))
+             if isinstance(leaf, StreamedWeight)])
+        assert dst["dispatches"] == len(dplan.buckets), (
+            f"decode dispatches {dst['dispatches']} != plan buckets "
+            f"{len(dplan.buckets)}")
         rows += [
             (f"pipeline_tree/{arch}/decode_legacy_cold",
              d_legacy_cold * 1e6, f"{n_leaves * n_layers}_decode_dispatches"),
             (f"pipeline_tree/{arch}/decode_stacked_cold",
              d_stacked_cold * 1e6,
              f"{dst['dispatches']}_decode_dispatches_"
-             f"{dst['compiles']}_compiles"),
+             f"{dst['compiles']}_compiles_{len(dplan.buckets)}_plan_buckets"),
             (f"pipeline_tree/{arch}/decode_legacy_warm",
              d_legacy_warm * 1e6, ""),
             (f"pipeline_tree/{arch}/decode_stacked_warm",

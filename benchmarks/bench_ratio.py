@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import compress_array, decompress_array
+from repro.core import default_codec
 from repro.data.synthetic_weights import PAPER_MODELS, generate
 
 from .common import deflate_ratio, time_fn, zipnn_like_ratio
@@ -16,9 +16,10 @@ def run():
     rows = []
     for spec in PAPER_MODELS:
         x = generate(spec)
-        t0 = time_fn(lambda v: compress_array(v), x, iters=1, warmup=0)
-        ct = compress_array(x)
-        y = decompress_array(ct)
+        t0 = time_fn(lambda v: default_codec().compress_array(v), x,
+                     iters=1, warmup=0)
+        ct = default_codec().compress_array(x)
+        y = default_codec().decompress_array(ct)
         dt = np.uint16 if spec.dtype != "fp32" else np.uint32
         lossless = bool((np.asarray(jax.device_get(x)).view(dt)
                          == np.asarray(jax.device_get(y)).view(dt)).all())

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import BF16, compress_array, decompress_array, search_for_array
+from repro.core import BF16, default_codec, search_for_array
 from repro.data.synthetic_weights import PAPER_MODELS, generate
 
 
@@ -20,9 +20,9 @@ def run():
         if spec.dtype != "bf16" or spec.name == source.name:
             continue
         x = generate(spec)
-        ct_t = compress_array(x, p_src)       # transferred (auto-widen ok)
-        ct_o = compress_array(x)              # optimal per-tensor search
-        y = decompress_array(ct_t)
+        ct_t = default_codec().compress_array(x, p_src)  # transferred
+        ct_o = default_codec().compress_array(x)   # optimal search
+        y = default_codec().decompress_array(ct_t)
         lossless = bool((np.asarray(jax.device_get(x)).view(np.uint16)
                          == np.asarray(jax.device_get(y)).view(np.uint16)
                          ).all())

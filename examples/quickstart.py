@@ -2,9 +2,11 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Compresses realistic BF16 weights, verifies bit-identical reconstruction,
-prints the searched (b, n, m, L) parameters and the compression ratio —
-the 60-second version of the paper's Tables II/IV.
+Uses the v1 ``Codec`` API (docs/API.md): construct a codec, compress
+realistic BF16 weights, verify bit-identical reconstruction, inspect an
+encode plan (bucket assignment + dispatch count), and print the searched
+(b, n, m, L) parameters and the compression ratio — the 60-second version
+of the paper's Tables II/IV.
 """
 import sys
 from pathlib import Path
@@ -14,8 +16,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax
 import numpy as np
 
-from repro.core import (compress_array, compress_tree, decompress_array,
-                        search_for_array, tree_ratio, BF16)
+from repro.core import BF16, Codec, search_for_array, tree_ratio
 from repro.core.wire import from_wire, to_wire
 from repro.data.synthetic_weights import PAPER_MODELS, generate
 
@@ -28,8 +29,9 @@ def main():
     print(f"searched params   : (b, n, m, L) = {p.astuple()}  "
           f"(paper Table IV: (122, 6, 3, 16))")
 
-    ct = compress_array(x, p)
-    y = decompress_array(ct)
+    codec = Codec()   # instance-scoped caches/counters; no process globals
+    ct = codec.compress_array(x, p)
+    y = codec.decompress_array(ct)
     bits_in = np.asarray(jax.device_get(x)).view(np.uint16)
     bits_out = np.asarray(jax.device_get(y)).view(np.uint16)
     assert (bits_in == bits_out).all()
@@ -37,15 +39,23 @@ def main():
     print(f"compression ratio : {ct.ratio():.3f}x  (paper Table II: 1.35)")
 
     blob = to_wire(ct)
-    ct2 = from_wire(blob)
-    assert (np.asarray(jax.device_get(decompress_array(ct2))).view(np.uint16)
-            == bits_in).all()
+    ct2 = from_wire(blob, codec=codec)
+    assert (np.asarray(jax.device_get(codec.decompress_array(ct2)))
+            .view(np.uint16) == bits_in).all()
     print(f"wire format       : {len(blob):,} bytes "
           f"(raw {x.size * 2:,}); round-trips exactly")
 
     tree = {"layer0": {"w": x[: 1 << 20].reshape(1024, 1024)},
             "scale": jax.numpy.ones((16,), jax.numpy.float32)}
-    stats = tree_ratio(compress_tree(tree))
+    # plan/execute split: the bucket assignment is inspectable data — one
+    # jit dispatch per bucket, asserted before anything runs
+    plan = codec.plan_encode(tree)
+    print(f"encode plan       : {len(plan.buckets)} dispatch(es) for "
+          f"{plan.n_inputs} leaves, ~{plan.predicted_wire_bytes:,} "
+          f"predicted wire bytes")
+    ctree = codec.execute(plan)
+    assert codec.encode_cache_stats()["dispatches"] >= len(plan.buckets)
+    stats = tree_ratio(ctree)
     print(f"pytree API        : {stats}")
 
 

@@ -19,9 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
+from repro.core import Codec, use_codec
 from repro.models import build_model
 from repro.runtime.streaming import (compress_params_for_streaming,
-                                     stream_stats)
+                                     stream_stats, streaming_encode_plan)
 
 
 def main():
@@ -37,8 +38,18 @@ def main():
                               vocab_size=4096, scan_layers=True)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
+    # this server's explicit Codec instance (v1 API, docs/API.md): its
+    # caches and counters are isolated from any other model in the process
+    codec = Codec()
+    plan = streaming_encode_plan(params, min_bytes=4096, shards=2,
+                                 codec=codec)
+    print(f"[serve] encode plan: {len(plan.buckets)} dispatch(es), "
+          f"~{plan.predicted_wire_bytes / 1e6:.2f} MB predicted wire")
+    # hand the inspected plan back — the policy executes it directly
+    # instead of re-planning (stats + search + block staging) from scratch
     streamed = compress_params_for_streaming(params, min_bytes=4096,
-                                             shards=2)
+                                             shards=2, codec=codec,
+                                             plan=plan)
     print("[serve] stream stats:", stream_stats(streamed))
 
     rng = jax.random.key(1)
@@ -46,28 +57,31 @@ def main():
         rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)
     max_len = args.prompt_len + args.tokens
 
-    # StreamedWeight handles resolve inside the model — no hook to pass
+    # StreamedWeight handles resolve inside the model — no hook to pass;
+    # the jits trace under use_codec so decodes ride THIS codec's caches
     prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, max_len))
     decode = jax.jit(lambda p, c, t: model.decode_fn(p, c, t))
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(streamed, {"tokens": prompts})
-    logits.block_until_ready()
-    ttft = time.perf_counter() - t0
-    # cross-check against dense weights: ENEC is lossless -> bit-identical
-    logits_dense, _ = jax.jit(lambda p, b: model.prefill_fn(p, b, max_len))(
-        params, {"tokens": prompts})
-    assert float(jnp.abs(logits_dense - logits).max()) == 0.0
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.tokens - 1):
-        logits, cache = decode(streamed, cache, tok)
+    with use_codec(codec):
+        t0 = time.perf_counter()
+        logits, cache = prefill(streamed, {"tokens": prompts})
+        logits.block_until_ready()
+        ttft = time.perf_counter() - t0
+        # cross-check against dense weights: lossless -> bit-identical
+        logits_dense, _ = jax.jit(
+            lambda p, b: model.prefill_fn(p, b, max_len))(
+            params, {"tokens": prompts})
+        assert float(jnp.abs(logits_dense - logits).max()) == 0.0
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    tpot = (time.perf_counter() - t0) / max(args.tokens - 1, 1)
+
+        out_tokens = [tok]
+        t0 = time.perf_counter()
+        for _ in range(args.tokens - 1):
+            logits, cache = decode(streamed, cache, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out_tokens.append(tok)
+        jax.block_until_ready(tok)
+        tpot = (time.perf_counter() - t0) / max(args.tokens - 1, 1)
 
     gen = jnp.stack(out_tokens, axis=1)
     print(f"[serve] batch={args.batch} TTFT={ttft*1e3:.1f} ms "

@@ -56,13 +56,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api as enec_api
 from repro.core import wire as enec_wire
+from repro.core.api import SUPPORTED_FLOAT_DTYPES, slice_stacked
+from repro.core.codec_api import Codec, current_codec
 from repro.runtime import streaming as rt_streaming
 from repro.runtime.weights import (DenseWeight, finish_materialize,
                                    handle_from_spec, handle_spec, is_handle)
 
-_ENEC_DTYPES = enec_api.SUPPORTED_FLOAT_DTYPES
+_ENEC_DTYPES = SUPPORTED_FLOAT_DTYPES
 
 MANIFEST_FORMAT = "enec-v2"
 
@@ -108,12 +109,18 @@ class CheckpointManager:
     serving_layout: Optional[str] = None   # None | "stream" | "fused"
     serving_min_bytes: int = rt_streaming.MIN_STREAM_BYTES
     serving_shards: int = 1
+    codec: Optional[Codec] = None          # default: ambient codec at init
     _thread: Optional[threading.Thread] = None
     _exc: Optional[BaseException] = None
 
     def __post_init__(self):
         self.root = Path(self.root)
         self.root.mkdir(parents=True, exist_ok=True)
+        self.last_decode_plan = None   # DecodePlan of the latest load
+        if self.codec is None:
+            # captured once — every save/load of this manager encodes and
+            # decodes through ONE codec instance (caches, counters)
+            self.codec = current_codec()
         if self.serving_layout is not None and \
                 self.serving_layout not in ("stream", "fused"):
             raise ValueError(
@@ -210,7 +217,7 @@ class CheckpointManager:
         if serve_jobs:
             shards = 1 if self.serving_layout == "fused" \
                 else self.serving_shards
-            cts = enec_api.compress_stacked_many(
+            cts = self.codec.compress_stacked_many(
                 [j["arr"] for j in serve_jobs], shards=shards)
             for job, ct in zip(serve_jobs, cts):
                 i = job["slot"]
@@ -234,15 +241,16 @@ class CheckpointManager:
         # — leaves whose (n, m, L) coincide share one concatenated dispatch
         # via the encoder's dynamic-b bucketing.
         float_slots.sort()
-        cts = enec_api.compress_stacked_many(
+        cts = self.codec.compress_stacked_many(
             [jnp.asarray(leaves[i])[None] for i in float_slots])
         for i, ct in zip(float_slots, cts):
             if ct is None:
                 # const / incompressible / empty: per-leaf escape path.
                 payload[i] = ("ct",
-                              enec_api.compress_array(jnp.asarray(leaves[i])))
+                              self.codec.compress_array(
+                                  jnp.asarray(leaves[i])))
             else:
-                payload[i] = ("ct", enec_api.slice_stacked(ct, 0))
+                payload[i] = ("ct", slice_stacked(ct, 0))
         return payload, dense_specs
 
     # -- record building / pack writing ----------------------------------
@@ -458,8 +466,7 @@ class CheckpointManager:
                             f"frame length {end} != indexed {len(buf)}")
                     yield e, payload
 
-    @staticmethod
-    def _decode_npraw(e, blob):
+    def _decode_npraw(self, e, blob):
         blob = bytes(blob)
         if blob[:4] != b"RAW0":
             raise CheckpointError(f"corrupt raw blob for {e['name']}")
@@ -468,13 +475,15 @@ class CheckpointManager:
             raise CheckpointError(
                 f"{e['name']}: raw payload holds {arr.size} elements, "
                 f"manifest declares shape {e['shape']}")
-        return enec_wire.h2d(arr.reshape(e["shape"]))
+        # counted on this manager's codec like every other record upload
+        return enec_wire.h2d(arr.reshape(e["shape"]), self.codec)
 
     def _record_ct(self, e, blob):
         """Deserialize one compressed record's payload — the compressed
-        streams move to device here; nothing is decoded yet."""
+        streams move to device here (counted on this manager's codec);
+        nothing is decoded yet."""
         try:
-            return enec_wire.from_wire(blob)
+            return enec_wire.from_wire(blob, codec=self.codec)
         except enec_wire.WireError as err:
             raise CheckpointError(f"{e['name']}: {err}") from err
 
@@ -501,9 +510,18 @@ class CheckpointManager:
         dispatch (``core.api.decompress_stacked_many``), so restoring a
         model costs O(#buckets) decode dispatches instead of one per
         record.  The decode runs where the streams live (device); outputs
-        are bit-identical to the retired per-record path."""
-        decs = enec_api.decompress_stacked_many(
+        are bit-identical to the retired per-record path.  The executed
+        :class:`repro.core.DecodePlan` is kept on ``last_decode_plan`` so
+        callers (benches, CI) can assert the restore cost
+        ``len(plan.buckets)`` dispatches."""
+        plan = self.codec.plan_decode(
             [obj.ct if is_handle(obj) else obj for _, _, obj in pending])
+        decs = self.codec.execute(plan)
+        # keep only the inspectable summary: the execution-state fields
+        # hold the full compressed streams on device and would pin them
+        # until the next load
+        self.last_decode_plan = dataclasses.replace(
+            plan, _treedef=None, _groups=[], _passthrough={}, _leaves=[])
         for (name, like, obj), dec in zip(pending, decs):
             val = finish_materialize(obj, dec) if is_handle(obj) else dec
             self._check_leaf(name, val.shape, like)
@@ -600,5 +618,6 @@ class CheckpointManager:
         tree = jax.tree_util.tree_unflatten(treedef,
                                             [vals.pop(n) for n in full])
         tree = rt_streaming.assign_weight_modes(
-            tree, mode=mode, min_bytes=min_bytes, shards=shards)
+            tree, mode=mode, min_bytes=min_bytes, shards=shards,
+            codec=self.codec)
         return tree, manifest

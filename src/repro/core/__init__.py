@@ -1,26 +1,48 @@
-"""ENEC core: the paper's contribution as a composable JAX module."""
-from .api import (CompressedTensor, abstract_compressed, compress_array,
-                  compress_stacked, compress_stacked_many, compress_tree,
-                  decode_cache_stats, decompress_array, decompress_stacked,
-                  decompress_stacked_many, decompress_tree,
-                  encode_cache_stats, precompute_wire_bytes,
-                  reset_decode_cache_stats, reset_encode_cache_stats,
-                  set_decode_backend, set_encode_backend, slice_stacked,
-                  tree_ratio)
+"""ENEC core: the paper's contribution as a composable JAX module.
+
+The v1 public API is :class:`Codec` / :class:`CodecConfig` with the
+plan/execute split (``plan_encode`` / ``plan_decode`` / ``execute``) — see
+docs/API.md for the stability contract.  The module-level compression
+functions (``compress_array`` et al.) are deprecated wrappers over the
+ambient codec (:func:`current_codec`), kept for pre-Codec callers.
+"""
+from .api import (DEPRECATED_WRAPPERS, CompressedTensor, abstract_compressed,
+                  compress_array, compress_stacked, compress_stacked_many,
+                  compress_tree, decode_cache_stats, decompress_array,
+                  decompress_stacked, decompress_stacked_many,
+                  decompress_tree, encode_cache_stats, matmul_tiles,
+                  precompute_wire_bytes, reset_decode_cache_stats,
+                  reset_encode_cache_stats, set_decode_backend,
+                  set_encode_backend, slice_stacked, tile_weights_for_fusion,
+                  tile_weights_for_fusion_many, tree_ratio,
+                  untile_matmul_weight)
 from .codec import BlockStreams, decode_blocks, encode_blocks
+from .codec_api import (BACKENDS, Codec, CodecConfig, DecodeBucket,
+                        DecodePlan, EncodeBucket, EncodePlan, current_codec,
+                        default_codec, set_default_codec, use_codec)
 from .dtypes import BF16, FORMATS, FP16, FP32, FloatFormat, format_for
 from .params import (DEFAULT_BLOCK_ELEMS, EnecParams, expected_ratio, search,
                      search_for_array)
 from .stats import StackStats, exponent_histogram_device, stack_stats
 
 __all__ = [
-    "CompressedTensor", "abstract_compressed", "compress_array",
-    "compress_stacked", "compress_stacked_many", "compress_tree",
-    "decode_cache_stats", "decompress_array", "decompress_stacked",
-    "decompress_stacked_many", "decompress_tree",
-    "encode_cache_stats", "precompute_wire_bytes",
-    "reset_decode_cache_stats", "reset_encode_cache_stats",
-    "set_decode_backend", "set_encode_backend", "slice_stacked", "tree_ratio",
+    # -- v1 public API: instance-scoped codec + plan/execute --------------
+    "BACKENDS", "Codec", "CodecConfig",
+    "DecodeBucket", "DecodePlan", "EncodeBucket", "EncodePlan",
+    "current_codec", "default_codec", "set_default_codec", "use_codec",
+    # -- data model + stateless utilities ---------------------------------
+    "CompressedTensor", "abstract_compressed", "matmul_tiles",
+    "precompute_wire_bytes", "slice_stacked", "tree_ratio",
+    # -- deprecated module-level wrappers (DEPRECATED_WRAPPERS lists them) -
+    "DEPRECATED_WRAPPERS",
+    "compress_array", "compress_stacked", "compress_stacked_many",
+    "compress_tree", "decode_cache_stats", "decompress_array",
+    "decompress_stacked", "decompress_stacked_many", "decompress_tree",
+    "encode_cache_stats", "reset_decode_cache_stats",
+    "reset_encode_cache_stats", "set_decode_backend", "set_encode_backend",
+    "tile_weights_for_fusion", "tile_weights_for_fusion_many",
+    "untile_matmul_weight",
+    # -- block codec / formats / params / stats ----------------------------
     "BlockStreams", "decode_blocks", "encode_blocks",
     "BF16", "FORMATS", "FP16", "FP32", "FloatFormat", "format_for",
     "DEFAULT_BLOCK_ELEMS", "EnecParams", "expected_ratio", "search",

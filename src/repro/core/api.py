@@ -1,34 +1,34 @@
-"""Public ENEC API: compress/decompress arrays, layer stacks, and pytrees.
+"""ENEC data model + the legacy module-level compression facade.
 
 ``CompressedTensor`` is a registered pytree, so compressed weights flow
 through ``jax.jit`` / ``pjit`` / shardings like any other parameters — this
 is what makes weight-streaming serving and compressed checkpointing
 first-class citizens of the framework rather than host-side tools.
 
-The encode pipeline is device-resident (docs/PIPELINE.md): per-tensor
-statistics are a single jit'd reduction whose 256-bin histogram is the only
-thing that crosses to the host, the host-side O(256^2) parameter search runs
-on that histogram, and the encode itself is one jit dispatch per
-(format, params, block-count bucket) — a whole ``(L, ...)`` layer stack is
-encoded as one ``(L*B, N)`` block array via :func:`compress_stacked`.
-``compress_array`` never calls ``jax.device_get`` on the full tensor.
+The pipeline itself lives on :class:`repro.core.Codec`
+(``core/codec_api.py``): an instance-scoped object owning its own
+encoder/decoder compile caches, cache stats, and transfer counters, with an
+explicit plan/execute split.  The module-level functions below —
+``compress_array`` / ``compress_stacked_many`` / ``set_encode_backend`` and
+friends — are **deprecated** thin wrappers over the ambient codec
+(:func:`repro.core.current_codec`); they keep pre-Codec callers, trees, and
+wire records working bit-identically.  New code should construct a
+``Codec`` and call its methods (docs/API.md has the migration table).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import warnings
 from typing import Any, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import codec, params as params_mod, stats as stats_mod
+from . import codec
 from .codec import BlockStreams
 from .dtypes import FORMATS, FloatFormat, format_for
 from .params import DEFAULT_BLOCK_ELEMS, EnecParams
-
-HEADER_BYTES = 48  # nominal per-tensor wire header for ratio accounting
 
 
 @jax.tree_util.register_dataclass
@@ -42,7 +42,7 @@ class CompressedTensor:
     Leading ``shards`` dimension on every stream makes per-device placement
     trivial: shard axis 0 over the TP axis and each device owns its blocks.
 
-    A stacked tensor (from :func:`compress_stacked`) carries one extra
+    A stacked tensor (from :meth:`Codec.compress_stacked`) carries one extra
     leading ``(L,)`` dimension on every stream while the static metadata
     still describes a single layer — ``lax.scan`` slices the leading dim
     away and each slice is a valid per-layer ``CompressedTensor``.
@@ -72,32 +72,45 @@ class CompressedTensor:
             self.streams if self.mode == "enec" else self.raw_bytes)
         return sum(l.size * l.dtype.itemsize for l in leaves)
 
-    def nbytes_wire(self) -> int:
-        """Exact compressed size (paper's file-based accounting).
+    def _overhead(self) -> int:
+        # exact framed-record overhead (enec-v2 frame + record header) —
+        # single source of truth in core/wire.py; lazy import breaks the
+        # api <- wire module cycle (wire needs CompressedTensor at load)
+        from . import wire
+        return wire.record_overhead_bytes(self.mode, len(self.shape))
 
-        The first call on an "enec" tensor transfers the (tiny) per-block
-        ``high_len`` vector and caches the result; use
-        :func:`precompute_wire_bytes` to batch that transfer over a whole
-        tree instead of syncing once per tensor.
+    def nbytes_wire(self) -> int:
+        """Exact compressed size: ``len(wire.frame(wire.to_wire(self)))``.
+
+        Accounts the REAL enec-v2 frame layout (frame header + record
+        header + per-block byte-padded high streams), regression-tested
+        against the serializer.  The first call on an "enec" tensor
+        transfers the (tiny) per-block ``high_len`` vector and caches the
+        result; use :func:`precompute_wire_bytes` to batch that transfer
+        over a whole tree instead of syncing once per tensor.
         """
         if self.mode == "const":
-            return jnp.dtype(self.dtype_str).itemsize + HEADER_BYTES
+            return jnp.dtype(self.dtype_str).itemsize + self._overhead()
         if self.mode == "raw":
-            return int(np.prod(self.shape)) * jnp.dtype(self.dtype_str).itemsize + HEADER_BYTES
+            return int(np.prod(self.shape)) * jnp.dtype(self.dtype_str).itemsize \
+                + self._overhead()
         cached = getattr(self, "_wire_bytes", None)
         if cached is not None:
             return cached
-        high_bits = int(np.asarray(
-            jax.device_get(self.streams.high_len), np.int64).sum())
-        return self._set_wire_bytes(high_bits)
+        return self._set_wire_bytes(jax.device_get(self.streams.high_len))
 
-    def _set_wire_bytes(self, total_high_bits: int) -> int:
-        """Fill the wire-size cache from an already-transferred high_len sum."""
+    def _set_wire_bytes(self, high_len_bits) -> int:
+        """Fill the wire-size cache from an already-transferred per-block
+        ``high_len`` vector (bits per block).  The wire format byte-pads the
+        high stream PER BLOCK, so the exact size needs the vector — summing
+        the bits first and rounding once undercounts by up to
+        ``nblocks - 1`` bytes."""
         s = self.streams
+        hl = np.asarray(high_len_bits, np.int64).reshape(-1)
         fixed = (s.mask.size + s.low.size + s.raw.size)
+        true_high = int(((hl + 7) // 8).sum())
         nblocks = int(np.prod(s.mask.shape[:-1]))  # per-block high length: 4B each
-        true_high = int(np.ceil(total_high_bits / 8))
-        self._wire_bytes = fixed + true_high + 4 * nblocks + HEADER_BYTES
+        self._wire_bytes = fixed + true_high + 4 * nblocks + self._overhead()
         return self._wire_bytes
 
     def nbytes_raw(self) -> int:
@@ -118,299 +131,6 @@ def _is_supported_float(x) -> bool:
     return jnp.asarray(x).dtype in SUPPORTED_FLOAT_DTYPES
 
 
-# ---------------------------------------------------------------------------
-# encoder compile cache (fmt, params, block_elems, block-count bucket)
-# ---------------------------------------------------------------------------
-
-_ENCODE_BACKENDS = ("reference", "pallas")
-_encode_backend = "reference"
-_encode_cache: dict = {}
-_encode_stats = {"compiles": 0, "cache_hits": 0, "dispatches": 0,
-                 "padded_blocks": 0}
-
-
-def set_encode_backend(name: str) -> None:
-    """Select the encoder the pipeline dispatches: the pure-jnp reference
-    codec (default, any backend) or the Pallas kernel (TPU hot path,
-    ``interpret=True`` elsewhere)."""
-    global _encode_backend
-    if name not in _ENCODE_BACKENDS:
-        raise ValueError(f"unknown encode backend {name!r}; "
-                         f"expected one of {_ENCODE_BACKENDS}")
-    if name != _encode_backend:
-        _encode_backend = name
-        _encode_cache.clear()
-
-
-def encode_cache_stats() -> dict:
-    """Counters for the jit'd-encoder cache (benchmarks + dispatch tests).
-
-    ``compiles`` counts distinct (backend, fmt, params, block_elems, bucket)
-    encoder instantiations (each traces/compiles once), ``dispatches`` counts
-    encode calls, ``padded_blocks`` the zero blocks added by power-of-two
-    bucketing.
-    """
-    return dict(_encode_stats, cached_encoders=len(_encode_cache),
-                backend=_encode_backend)
-
-
-def reset_encode_cache_stats(clear_cache: bool = False) -> None:
-    for k in _encode_stats:
-        _encode_stats[k] = 0
-    if clear_cache:
-        _encode_cache.clear()
-
-
-_BUCKET_POW2_MAX = 64
-
-
-def _block_bucket(nblocks: int) -> int:
-    """Round the block count up so a 48-layer model hits a handful of
-    compiled encoders instead of one per distinct tensor shape: powers of
-    two up to 64 blocks, multiples of 64 above (pure pow2 would pad up to 2x
-    the encode work for large stacks; 64-multiples keep the pad waste small
-    while still bounding the number of distinct compiles)."""
-    if nblocks <= 1:
-        return 1
-    if nblocks <= _BUCKET_POW2_MAX:
-        return 1 << (nblocks - 1).bit_length()
-    return -(-nblocks // _BUCKET_POW2_MAX) * _BUCKET_POW2_MAX
-
-
-def _encoder_key(fmt_name: str, p: EnecParams, block_elems: int) -> tuple:
-    """Compile-cache key sans block count.  The reference encoder keeps the
-    linear-map parameter ``b`` as a traced per-block operand (it never enters
-    a shape), so one compiled program serves every ``b`` — the key carries
-    only (n, m, L).  The Pallas kernel bakes the whole param tuple in."""
-    if _encode_backend == "pallas":
-        return (_encode_backend, fmt_name, p.astuple(), block_elems)
-    return (_encode_backend, fmt_name, (p.n, p.m, p.L), block_elems)
-
-
-def _encoder_for(fmt_name: str, p: EnecParams, block_elems: int, bucket: int):
-    key = _encoder_key(fmt_name, p, block_elems) + (bucket,)
-    fn = _encode_cache.get(key)
-    if fn is None:
-        if len(_encode_cache) >= 512:   # safety valve; never hit in practice
-            _encode_cache.clear()
-        _encode_stats["compiles"] += 1
-        fmt = FORMATS[fmt_name]
-        # encode reads (n, m, L) for shapes and b for arithmetic only;
-        # normalizing the bookkeeping fields lets params that differ in
-        # (l, expected_bits) — and, on the reference backend, b — share
-        # one compile
-        p_norm = EnecParams(b=p.b, n=p.n, m=p.m, L=p.L, l=0)
-        if _encode_backend == "pallas":
-            from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
-            fn = kernel_ops.pipeline_encoder(fmt, p_norm)
-        else:
-            fn = jax.jit(functools.partial(codec.encode_blocks,
-                                           fmt=fmt, p=p_norm))
-        _encode_cache[key] = fn
-    else:
-        _encode_stats["cache_hits"] += 1
-    return fn
-
-
-def _encode_bucketed(bits, fmt: FloatFormat, p: EnecParams, block_elems: int,
-                     b_vec=None) -> BlockStreams:
-    """One encode dispatch for a (B, N) block array, compile-cached on the
-    bucketed block count (pad with zero blocks, slice the result).
-
-    ``b_vec`` optionally carries a per-block linear-map parameter so blocks
-    from stacks with different searched ``b`` share the dispatch.
-    """
-    nblocks = bits.shape[0]
-    bucket = _block_bucket(nblocks)
-    if _encode_backend != "pallas" and b_vec is None:
-        b_vec = jnp.full((nblocks,), p.b, jnp.int32)
-    if bucket != nblocks:
-        _encode_stats["padded_blocks"] += bucket - nblocks
-        bits = jnp.concatenate(
-            [bits, jnp.zeros((bucket - nblocks, bits.shape[1]), bits.dtype)])
-        if b_vec is not None:
-            b_vec = jnp.concatenate(
-                [b_vec, jnp.full((bucket - nblocks,), p.b, jnp.int32)])
-    fn = _encoder_for(fmt.name, p, block_elems, bucket)
-    _encode_stats["dispatches"] += 1
-    streams = fn(bits) if b_vec is None else fn(bits, b_vec=b_vec)
-    if bucket != nblocks:
-        streams = jax.tree.map(lambda a: a[:nblocks], streams)
-    return streams
-
-
-# ---------------------------------------------------------------------------
-# decoder compile cache — the decode-side mirror of the encoder cache
-# ---------------------------------------------------------------------------
-
-_decode_backend = "reference"
-_decode_cache: dict = {}
-_decode_stats = {"compiles": 0, "cache_hits": 0, "dispatches": 0,
-                 "padded_blocks": 0}
-
-
-def set_decode_backend(name: str) -> None:
-    """Select the decoder the pipeline dispatches: the pure-jnp reference
-    codec (default, any backend) or the Pallas kernel (TPU hot path,
-    ``interpret=True`` elsewhere).  Mirror of :func:`set_encode_backend`."""
-    global _decode_backend
-    if name not in _ENCODE_BACKENDS:
-        raise ValueError(f"unknown decode backend {name!r}; "
-                         f"expected one of {_ENCODE_BACKENDS}")
-    if name != _decode_backend:
-        _decode_backend = name
-        _decode_cache.clear()
-
-
-def decode_cache_stats() -> dict:
-    """Counters for the jit'd-decoder cache (benchmarks + dispatch tests).
-
-    ``compiles`` counts distinct (backend, fmt, params, block_elems, bucket)
-    decoder instantiations, ``dispatches`` counts decode calls,
-    ``padded_blocks`` the zero blocks added by block-count bucketing.
-    Mirror of :func:`encode_cache_stats`.
-    """
-    return dict(_decode_stats, cached_decoders=len(_decode_cache),
-                backend=_decode_backend)
-
-
-def reset_decode_cache_stats(clear_cache: bool = False) -> None:
-    for k in _decode_stats:
-        _decode_stats[k] = 0
-    if clear_cache:
-        _decode_cache.clear()
-
-
-def _decoder_key(fmt_name: str, p: EnecParams, block_elems: int) -> tuple:
-    """Compile-cache key sans block count.  The reference decoder keeps the
-    inverse-transform params ``(b, l)`` as traced per-block operands (they
-    never enter a shape), so one compiled program serves every searched
-    param set — the key carries only (n, m, L).  The Pallas kernel bakes
-    the whole tuple in."""
-    if _decode_backend == "pallas":
-        return (_decode_backend, fmt_name, p.astuple() + (p.l,), block_elems)
-    return (_decode_backend, fmt_name, (p.n, p.m, p.L), block_elems)
-
-
-def _decoder_for(fmt_name: str, p: EnecParams, block_elems: int, bucket: int):
-    key = _decoder_key(fmt_name, p, block_elems) + (bucket,)
-    fn = _decode_cache.get(key)
-    if fn is None:
-        if len(_decode_cache) >= 512:   # safety valve; never hit in practice
-            _decode_cache.clear()
-        _decode_stats["compiles"] += 1
-        fmt = FORMATS[fmt_name]
-        # decode reads (n, m, L) for shapes; (b, l) enter arithmetic only
-        # and the reference backend always overrides them with per-block
-        # vectors, so params differing in (b, l, expected_bits) share one
-        # compile there
-        p_norm = EnecParams(b=p.b, n=p.n, m=p.m, L=p.L, l=p.l)
-        if _decode_backend == "pallas":
-            from repro.kernels import ops as kernel_ops  # lazy: avoids cycle
-            fn = kernel_ops.pipeline_decoder(fmt, p_norm, block_elems)
-        else:
-            fn = jax.jit(functools.partial(codec.decode_blocks,
-                                           n_elems=block_elems, fmt=fmt,
-                                           p=p_norm))
-        _decode_cache[key] = fn
-    else:
-        _decode_stats["cache_hits"] += 1
-    return fn
-
-
-def _decode_bucketed(streams: BlockStreams, fmt: FloatFormat, p: EnecParams,
-                     block_elems: int, b_vec=None, l_vec=None):
-    """One decode dispatch for flat (B, ...) block streams, compile-cached
-    on the bucketed block count (pad with zero blocks, slice the result).
-
-    ``b_vec`` / ``l_vec`` optionally carry per-block inverse-transform
-    params so blocks from tensors with different searched ``(b, l)`` share
-    the dispatch.
-    """
-    nblocks = streams.mask.shape[0]
-    bucket = _block_bucket(nblocks)
-    if _decode_backend != "pallas":
-        if b_vec is None:
-            b_vec = jnp.full((nblocks,), p.b, jnp.int32)
-        if l_vec is None:
-            l_vec = jnp.full((nblocks,), p.l, jnp.int32)
-    if bucket != nblocks:
-        _decode_stats["padded_blocks"] += bucket - nblocks
-        pad = bucket - nblocks
-        streams = jax.tree.map(
-            lambda a: jnp.concatenate(
-                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)]), streams)
-        if b_vec is not None:
-            b_vec = jnp.concatenate([b_vec, jnp.full((pad,), p.b, jnp.int32)])
-            l_vec = jnp.concatenate([l_vec, jnp.full((pad,), p.l, jnp.int32)])
-    fn = _decoder_for(fmt.name, p, block_elems, bucket)
-    _decode_stats["dispatches"] += 1
-    bits = (fn(streams) if b_vec is None
-            else fn(streams, b_vec=b_vec, l_vec=l_vec))
-    return bits[:nblocks] if bucket != nblocks else bits
-
-
-_flat_streams = codec.flatten_blocks
-
-
-def _stack_dim(ct: "CompressedTensor") -> Optional[int]:
-    """Leading layer count of a stacked tensor, or ``None`` for a per-leaf
-    tensor (whose metadata already describes the whole array)."""
-    base = 3 if ct.shards > 1 else 2
-    return ct.streams.mask.shape[0] if ct.streams.mask.ndim == base + 1 \
-        else None
-
-
-# ---------------------------------------------------------------------------
-# single-array API
-# ---------------------------------------------------------------------------
-
-def compress_array(x, p: Optional[EnecParams] = None,
-                   block_elems: int = DEFAULT_BLOCK_ELEMS,
-                   shards: int = 1) -> CompressedTensor:
-    """Compress one array. ``p=None`` searches parameters on the host.
-
-    Device-resident: statistics (exponent histogram + const check) are one
-    jit'd reduction, only the histogram crosses to the host, and the full
-    tensor is never transferred.
-    """
-    x = jnp.asarray(x)
-    if not _is_supported_float(x) or x.size == 0:
-        return _raw_tensor(x, shards)
-    fmt = format_for(x.dtype)
-    flat_bits = jnp.ravel(x).view(fmt.uint_dtype)
-    st = stats_mod.stack_stats(flat_bits[None, :], fmt)
-    # constant-tensor escape (RZE-style, LC framework §II-C): fresh optimizer
-    # moments / padding tensors are all one value — store it once.
-    if bool(st.is_const[0]):
-        return CompressedTensor(
-            streams=None,
-            raw_bytes=jnp.asarray(st.first[:1]).view(jnp.uint8),
-            fmt_name=fmt.name, params=None, shape=tuple(x.shape),
-            dtype_str=str(x.dtype), block_elems=block_elems, shards=shards,
-            mode="const")
-    if p is None:
-        p = params_mod.search(st.hist, fmt, block_elems=block_elems)
-    # widen to the EXACT exponent bounds: a no-op for freshly searched params
-    # on an exact histogram, the lossless escape for transferred params, and
-    # the correctness guarantee when the histogram was sampled
-    p = params_mod.widen_for_range(p, *st.bounds())
-    bits, _ = codec.bits_to_blocks(flat_bits, block_elems, shards,
-                                   pad_value=p.b << fmt.mant_bits)
-    streams = _encode_bucketed(bits, fmt, p, block_elems)
-    if shards > 1:
-        streams = jax.tree.map(
-            lambda a: a.reshape((shards, a.shape[0] // shards) + a.shape[1:]),
-            streams)
-    ct = CompressedTensor(
-        streams=streams, raw_bytes=None, fmt_name=fmt.name, params=p,
-        shape=tuple(x.shape), dtype_str=str(x.dtype), block_elems=block_elems,
-        shards=shards, mode="enec")
-    if ct.nbytes_wire() >= ct.nbytes_raw():
-        return _raw_tensor(x, shards)  # incompressible: raw escape
-    return ct
-
-
 def _raw_tensor(x, shards: int) -> CompressedTensor:
     flat = jnp.ravel(x)
     buf = flat.view(jnp.uint8) if flat.dtype != jnp.uint8 else flat
@@ -420,227 +140,8 @@ def _raw_tensor(x, shards: int) -> CompressedTensor:
         block_elems=0, shards=shards, mode="raw")
 
 
-def decompress_array(ct: CompressedTensor):
-    """Exact inverse of :func:`compress_array` (jit-compatible).
-
-    Rides the bucketed, compile-cached decoder of the batched pipeline, so
-    even per-leaf calls share compiled decode programs across tensors; use
-    :func:`decompress_stacked_many` to share the *dispatch* too.
-    """
-    dtype = jnp.dtype(ct.dtype_str)
-    if ct.mode == "const":
-        value = ct.raw_bytes.view(dtype)[0]
-        return jnp.broadcast_to(value, ct.shape)
-    if ct.mode == "raw":
-        return ct.raw_bytes.view(dtype).reshape(ct.shape)
-    bits = _decode_bucketed(_flat_streams(ct.streams), ct.fmt, ct.params,
-                            ct.block_elems)
-    return codec.from_blocks(bits, ct.shape, ct.fmt)
-
-
 # ---------------------------------------------------------------------------
-# stacked (layer-stack) API — one dispatch per stack
-# ---------------------------------------------------------------------------
-
-def compress_stacked_many(stacks: Sequence[Any],
-                          p: Optional[EnecParams] = None,
-                          block_elems: int = DEFAULT_BLOCK_ELEMS,
-                          shards: int = 1) -> List[Optional[CompressedTensor]]:
-    """Compress many ``(L, ...)`` layer stacks with O(#buckets) dispatches.
-
-    Pipeline (docs/PIPELINE.md): one stats dispatch per stack, ONE host
-    transfer for all statistics, host-side parameter search per stack, then
-    stacks sharing an encoder bucket (fmt, params, block_elems) are
-    concatenated and encoded in a single dispatch.  Wire-size accounting for
-    the never-worse escape is one more batched transfer of the per-block
-    ``high_len`` vectors.
-
-    Returns one entry per input stack: a ``CompressedTensor`` whose stream
-    arrays carry a leading ``(L, ...)`` layout (metadata describes a single
-    layer, matching what per-layer :func:`compress_array` + ``jnp.stack``
-    used to produce), or ``None`` when the stack must stay dense
-    (unsupported dtype, a constant layer, or incompressible data).
-    """
-    results: List[Optional[CompressedTensor]] = [None] * len(stacks)
-    prepared = []   # (slot, fmt, bits2d, layer_shape, device_stats)
-    for slot, x in enumerate(stacks):
-        x = jnp.asarray(x)
-        if x.ndim < 1 or not _is_supported_float(x) or x.size == 0:
-            continue
-        fmt = format_for(x.dtype)
-        bits2d = x.reshape(x.shape[0], -1).view(fmt.uint_dtype)
-        prepared.append((slot, fmt, bits2d, x.shape[1:], str(x.dtype),
-                         stats_mod.stack_stats_device(bits2d, fmt)))
-    host_stats = stats_mod.fetch_stats([pr[-1] for pr in prepared])
-
-    # host search + block layout, grouped by encoder key
-    groups: dict = {}   # key -> list of plan dicts
-    for (slot, fmt, bits2d, layer_shape, dtype_str, _), st in zip(
-            prepared, host_stats):
-        if st.is_const.any():
-            continue    # parity with the per-layer const escape: stay dense
-        pi = (params_mod.search(st.hist, fmt, block_elems=block_elems)
-              if p is None else p)
-        # one widen to the stack's exact bounds: covers transferred params
-        # and sampled histograms, and — unlike the retired per-layer loop —
-        # cannot end up with layers encoded under different params than the
-        # stack metadata advertises
-        pi = params_mod.widen_for_range(pi, *st.bounds())
-        blocks, per_layer_blocks = codec.stacked_blocks(
-            bits2d, block_elems, shards, pad_value=pi.b << fmt.mant_bits)
-        key = _encoder_key(fmt.name, pi, block_elems)
-        groups.setdefault(key, []).append(dict(
-            slot=slot, fmt=fmt, p=pi, blocks=blocks,
-            n_layers=bits2d.shape[0], layer_shape=layer_shape,
-            dtype_str=dtype_str, per_layer_blocks=per_layer_blocks))
-
-    for members in groups.values():
-        if len(members) == 1:
-            all_blocks = members[0]["blocks"]
-        else:
-            all_blocks = jnp.concatenate([m["blocks"] for m in members])
-        b_vec = None
-        if _encode_backend != "pallas":
-            b_vec = jnp.concatenate(
-                [jnp.full((m["blocks"].shape[0],), m["p"].b, jnp.int32)
-                 for m in members])
-        streams = _encode_bucketed(all_blocks, members[0]["fmt"],
-                                   members[0]["p"], block_elems, b_vec=b_vec)
-        offset = 0
-        for m in members:
-            nb = m["blocks"].shape[0]
-            s = jax.tree.map(lambda a: a[offset:offset + nb], streams)
-            offset += nb
-            n_layers, plb = m["n_layers"], m["per_layer_blocks"]
-            lead = ((n_layers, shards, plb // shards) if shards > 1
-                    else (n_layers, plb))
-            s = jax.tree.map(lambda a: a.reshape(lead + a.shape[1:]), s)
-            results[m["slot"]] = CompressedTensor(
-                streams=s, raw_bytes=None, fmt_name=m["fmt"].name,
-                params=m["p"], shape=tuple(m["layer_shape"]),
-                dtype_str=m["dtype_str"], block_elems=block_elems,
-                shards=shards, mode="enec")
-
-    # never-worse escape, one batched transfer for every stack's high_len
-    pending = [(slot, ct) for slot, ct in enumerate(results) if ct is not None]
-    if pending:
-        high_lens = jax.device_get([ct.streams.high_len for _, ct in pending])
-        for (slot, ct), hl in zip(pending, high_lens):
-            n_layers = ct.streams.mask.shape[0]
-            wire = ct._set_wire_bytes(int(np.asarray(hl, np.int64).sum()))
-            if wire >= n_layers * ct.nbytes_raw():
-                results[slot] = None
-    return results
-
-
-def compress_stacked(x, p: Optional[EnecParams] = None,
-                     block_elems: int = DEFAULT_BLOCK_ELEMS,
-                     shards: int = 1) -> Optional[CompressedTensor]:
-    """Compress one ``(L, ...)`` layer stack in a single encode dispatch.
-
-    Bit-identical to compressing each layer with :func:`compress_array`
-    under the same params and stacking the streams, without the L dispatches
-    or the stream-pytree copy.  Returns ``None`` when the stack must stay
-    dense (see :func:`compress_stacked_many`).
-    """
-    return compress_stacked_many([x], p, block_elems, shards)[0]
-
-
-def _stacked_from_bits(ct: CompressedTensor, n_layers: int, bits):
-    """(L*B, N) decoded bits -> the dense ``(L,) + ct.shape`` stack."""
-    per = int(np.prod(ct.shape))
-    flat_layers = bits.reshape(n_layers, -1)[:, :per]
-    return flat_layers.view(ct.fmt.float_dtype).reshape(
-        (n_layers,) + ct.shape).astype(jnp.dtype(ct.dtype_str))
-
-
-def decompress_stacked(ct: CompressedTensor):
-    """Inverse of :func:`compress_stacked`: one decode dispatch -> (L, ...)."""
-    n_layers = ct.streams.mask.shape[0]
-    bits = _decode_bucketed(_flat_streams(ct.streams), ct.fmt, ct.params,
-                            ct.block_elems)
-    return _stacked_from_bits(ct, n_layers, bits)
-
-
-def decompress_stacked_many(cts: Sequence[Optional[CompressedTensor]]
-                            ) -> List[Optional[Any]]:
-    """Decompress many CompressedTensors with O(#buckets) decode dispatches
-    — the decode-side mirror of :func:`compress_stacked_many`.
-
-    Tensors sharing a decoder bucket ``(backend, fmt, (n, m, L),
-    block_elems, block-count bucket)`` are concatenated and decoded in ONE
-    jit dispatch; the inverse-transform params ``(b, l)`` ride as traced
-    per-block vectors, so tensors with *different* searched params share
-    the dispatch too (the Pallas backend bakes params in and buckets on the
-    full tuple instead).  Outputs are bit-identical to the per-leaf path.
-
-    Accepts any mix of per-leaf and stacked tensors plus ``const`` / ``raw``
-    / ``None`` entries: each output slot is exactly what
-    :func:`decompress_array` (per-leaf) or :func:`decompress_stacked`
-    (stacked) would return, or ``None`` for ``None`` inputs.
-    """
-    results: List[Optional[Any]] = [None] * len(cts)
-    groups: dict = {}   # decoder key -> list of plan dicts
-    for slot, ct in enumerate(cts):
-        if ct is None:
-            continue
-        if ct.mode != "enec":
-            results[slot] = decompress_array(ct)    # const/raw: no dispatch
-            continue
-        groups.setdefault(
-            _decoder_key(ct.fmt_name, ct.params, ct.block_elems), []
-        ).append(dict(slot=slot, ct=ct, stack=_stack_dim(ct),
-                      flat=_flat_streams(ct.streams)))
-
-    for members in groups.values():
-        if len(members) == 1:
-            flat = members[0]["flat"]
-        else:
-            flat = jax.tree.map(lambda *xs: jnp.concatenate(xs),
-                                *[m["flat"] for m in members])
-        p0 = members[0]["ct"].params
-        b_vec = l_vec = None
-        if _decode_backend != "pallas":
-            b_vec = jnp.concatenate(
-                [jnp.full((m["flat"].mask.shape[0],), m["ct"].params.b,
-                          jnp.int32) for m in members])
-            l_vec = jnp.concatenate(
-                [jnp.full((m["flat"].mask.shape[0],), m["ct"].params.l,
-                          jnp.int32) for m in members])
-        bits = _decode_bucketed(flat, members[0]["ct"].fmt, p0,
-                                members[0]["ct"].block_elems,
-                                b_vec=b_vec, l_vec=l_vec)
-        offset = 0
-        for m in members:
-            nb = m["flat"].mask.shape[0]
-            bits_m = bits[offset:offset + nb]
-            offset += nb
-            ct = m["ct"]
-            results[m["slot"]] = (
-                codec.from_blocks(bits_m, ct.shape, ct.fmt)
-                if m["stack"] is None
-                else _stacked_from_bits(ct, m["stack"], bits_m))
-    return results
-
-
-def slice_stacked(ct: CompressedTensor, index: int) -> CompressedTensor:
-    """Layer ``index`` of a stacked tensor as a standalone CompressedTensor."""
-    return dataclasses.replace(
-        ct, streams=jax.tree.map(lambda a: a[index], ct.streams))
-
-
-# Legacy jit'd entry points.  decompress_array / decompress_stacked now ride
-# the bucketed decoder cache directly (the decode runs where the streams
-# live, never on the host), and the batched consumers (checkpoint restore,
-# whole-tree materialization) group tensors into shared dispatches via
-# decompress_stacked_many — these aliases remain for callers that want one
-# fused program around the whole inverse (decode + reshape + astype).
-decompress_on_device = jax.jit(decompress_array)
-decompress_stacked_on_device = jax.jit(decompress_stacked)
-
-
-# ---------------------------------------------------------------------------
-# tile-wise compression for the fused decompress+matmul kernel
+# tile layout for the fused decompress+matmul kernel (stateless)
 # ---------------------------------------------------------------------------
 
 MATMUL_TILE = 128
@@ -671,68 +172,9 @@ def matmul_tiles(w):
     return tiles.transpose(0, 3, 1, 2, 4).reshape(n_layers, -1)
 
 
-def untile_matmul_weight(ct: CompressedTensor, k: int, n: int):
-    """Inverse of :func:`matmul_tiles` for ONE layer slice of a tile-wise
-    tensor: decompress, un-permute the tile order, strip the padding."""
-    t = MATMUL_TILE
-    kp, np_ = -(-k // t) * t, -(-n // t) * t
-    flat = decompress_array(ct)
-    tiles = flat.reshape(np_ // t, kp // t, t, t)
-    return tiles.transpose(1, 2, 0, 3).reshape(kp, np_)[:k, :n]
-
-
-def tile_weights_for_fusion_many(ws: Sequence[Any], p: Optional[EnecParams]
-                                 = None) -> List[Optional[CompressedTensor]]:
-    """Compress many (L, K, N) / (K, N) matmul weights tile-wise for the
-    fused kernel, riding :func:`compress_stacked_many`: per-stack searched
-    params, one encode dispatch per (fmt, params, block-bucket) group, and
-    the never-worse escape intact (``None`` entries must stay dense)."""
-    return compress_stacked_many([matmul_tiles(w) for w in ws], p=p,
-                                 block_elems=DEFAULT_BLOCK_ELEMS, shards=1)
-
-
-def tile_weights_for_fusion(w, p: Optional[EnecParams] = None
-                            ) -> CompressedTensor:
-    """Compress one weight tile-wise for the fused kernel.
-
-    2-D input returns a per-layer tensor (streams lead with the tile dim);
-    3-D ``(L, K, N)`` input keeps the extra leading ``(L,)`` so ``lax.scan``
-    can slice the streams per layer.  Raises on the incompressible escape —
-    callers that need the fallback use :func:`tile_weights_for_fusion_many`.
-    """
-    squeeze = jnp.asarray(w).ndim == 2
-    ct = tile_weights_for_fusion_many([w], p)[0]
-    if ct is None:
-        raise ValueError("weight is incompressible or constant — serve dense")
-    if squeeze:
-        ct = dataclasses.replace(
-            ct, streams=jax.tree.map(lambda a: a[0], ct.streams))
-    return ct
-
-
 # ---------------------------------------------------------------------------
-# pytree-level API
+# wire-size utilities (stateless — no codec needed)
 # ---------------------------------------------------------------------------
-
-def compress_tree(tree, shared_params: Optional[EnecParams] = None,
-                  block_elems: int = DEFAULT_BLOCK_ELEMS, shards: int = 1):
-    """Compress every leaf; float leaves get per-tensor searched params
-    (or ``shared_params`` for the paper's transferability mode)."""
-    return jax.tree.map(
-        lambda x: compress_array(x, shared_params, block_elems, shards), tree)
-
-
-def decompress_tree(ctree):
-    """Inverse of :func:`compress_tree` with O(#decoder buckets) decode
-    dispatches (leaves sharing a bucket decode together)."""
-    flat, treedef = jax.tree_util.tree_flatten(
-        ctree, is_leaf=lambda x: isinstance(x, CompressedTensor))
-    slots = [i for i, l in enumerate(flat) if isinstance(l, CompressedTensor)]
-    outs = decompress_stacked_many([flat[i] for i in slots])
-    for i, out in zip(slots, outs):
-        flat[i] = out
-    return jax.tree_util.tree_unflatten(treedef, flat)
-
 
 def precompute_wire_bytes(cts: Sequence[CompressedTensor]) -> None:
     """Fill the ``nbytes_wire`` cache for many tensors with ONE transfer.
@@ -746,7 +188,7 @@ def precompute_wire_bytes(cts: Sequence[CompressedTensor]) -> None:
         return
     high_lens = jax.device_get([c.streams.high_len for c in pending])
     for c, hl in zip(pending, high_lens):
-        c._set_wire_bytes(int(np.asarray(hl, np.int64).sum()))
+        c._set_wire_bytes(hl)
 
 
 def tree_ratio(ctree) -> dict:
@@ -774,8 +216,8 @@ def abstract_compressed(shape, dtype, p: EnecParams,
                         block_elems: int = DEFAULT_BLOCK_ELEMS,
                         shards: int = 1) -> CompressedTensor:
     """Build a CompressedTensor of ShapeDtypeStructs (no allocation) matching
-    what :func:`compress_array` would produce — lets ``jit(...).lower`` see
-    the exact compressed layout for the production dry-run."""
+    what :meth:`Codec.compress_array` would produce — lets ``jit(...).lower``
+    see the exact compressed layout for the production dry-run."""
     fmt = format_for(dtype)
     size = 1
     for s in shape:
@@ -796,3 +238,191 @@ def abstract_compressed(shape, dtype, p: EnecParams,
         streams=streams, raw_bytes=None, fmt_name=fmt.name, params=p,
         shape=tuple(shape), dtype_str=str(jnp.dtype(dtype)),
         block_elems=block_elems, shards=shards, mode="enec")
+
+
+# ---------------------------------------------------------------------------
+# DEPRECATED module-level facade over the ambient codec
+# ---------------------------------------------------------------------------
+# Every function below delegates to repro.core.current_codec() and emits
+# exactly one DeprecationWarning per call.  They exist so pre-Codec callers
+# keep working bit-identically; new code uses Codec methods (docs/API.md).
+
+#: the legacy wrapper surface — the deprecation tests iterate this
+DEPRECATED_WRAPPERS = (
+    "compress_array", "decompress_array",
+    "compress_stacked", "compress_stacked_many",
+    "decompress_stacked", "decompress_stacked_many",
+    "compress_tree", "decompress_tree",
+    "tile_weights_for_fusion", "tile_weights_for_fusion_many",
+    "untile_matmul_weight",
+    "set_encode_backend", "set_decode_backend",
+    "encode_cache_stats", "decode_cache_stats",
+    "reset_encode_cache_stats", "reset_decode_cache_stats",
+)
+
+
+def _codec():
+    from .codec_api import current_codec  # lazy: api loads before codec_api
+    return current_codec()
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"repro.core.{name} is deprecated; use the {name} method of a "
+        f"repro.core.Codec instance (migration table: docs/API.md)",
+        DeprecationWarning, stacklevel=3)
+
+
+def compress_array(x, p: Optional[EnecParams] = None,
+                   block_elems: Optional[int] = None,
+                   shards: int = 1) -> CompressedTensor:
+    """DEPRECATED: :meth:`Codec.compress_array` on the ambient codec."""
+    _deprecated("compress_array")
+    return _codec().compress_array(x, p, block_elems, shards)
+
+
+def decompress_array(ct: CompressedTensor):
+    """DEPRECATED: :meth:`Codec.decompress_array` on the ambient codec."""
+    _deprecated("decompress_array")
+    return _codec().decompress_array(ct)
+
+
+def compress_stacked(x, p: Optional[EnecParams] = None,
+                     block_elems: Optional[int] = None,
+                     shards: int = 1) -> Optional[CompressedTensor]:
+    """DEPRECATED: :meth:`Codec.compress_stacked` on the ambient codec."""
+    _deprecated("compress_stacked")
+    return _codec().compress_stacked(x, p, block_elems, shards)
+
+
+def compress_stacked_many(stacks: Sequence[Any],
+                          p: Optional[EnecParams] = None,
+                          block_elems: Optional[int] = None,
+                          shards: int = 1) -> List[Optional[CompressedTensor]]:
+    """DEPRECATED: :meth:`Codec.compress_stacked_many` on the ambient codec."""
+    _deprecated("compress_stacked_many")
+    return _codec().compress_stacked_many(stacks, p, block_elems, shards)
+
+
+def decompress_stacked(ct: CompressedTensor):
+    """DEPRECATED: :meth:`Codec.decompress_stacked` on the ambient codec."""
+    _deprecated("decompress_stacked")
+    return _codec().decompress_stacked(ct)
+
+
+def decompress_stacked_many(cts: Sequence[Optional[CompressedTensor]]
+                            ) -> List[Optional[Any]]:
+    """DEPRECATED: :meth:`Codec.decompress_stacked_many` on the ambient
+    codec."""
+    _deprecated("decompress_stacked_many")
+    return _codec().decompress_stacked_many(cts)
+
+
+def compress_tree(tree, shared_params: Optional[EnecParams] = None,
+                  block_elems: Optional[int] = None, shards: int = 1):
+    """DEPRECATED: :meth:`Codec.compress_tree` on the ambient codec."""
+    _deprecated("compress_tree")
+    return _codec().compress_tree(tree, shared_params, block_elems, shards)
+
+
+def decompress_tree(ctree):
+    """DEPRECATED: :meth:`Codec.decompress_tree` on the ambient codec."""
+    _deprecated("decompress_tree")
+    return _codec().decompress_tree(ctree)
+
+
+def tile_weights_for_fusion(w, p: Optional[EnecParams] = None
+                            ) -> CompressedTensor:
+    """DEPRECATED: :meth:`Codec.tile_weights_for_fusion` on the ambient
+    codec."""
+    _deprecated("tile_weights_for_fusion")
+    return _codec().tile_weights_for_fusion(w, p)
+
+
+def tile_weights_for_fusion_many(ws: Sequence[Any],
+                                 p: Optional[EnecParams] = None
+                                 ) -> List[Optional[CompressedTensor]]:
+    """DEPRECATED: :meth:`Codec.tile_weights_for_fusion_many` on the
+    ambient codec."""
+    _deprecated("tile_weights_for_fusion_many")
+    return _codec().tile_weights_for_fusion_many(ws, p)
+
+
+def untile_matmul_weight(ct: CompressedTensor, k: int, n: int):
+    """DEPRECATED: :meth:`Codec.untile_matmul_weight` on the ambient codec."""
+    _deprecated("untile_matmul_weight")
+    return _codec().untile_matmul_weight(ct, k, n)
+
+
+def set_encode_backend(name: str) -> None:
+    """DEPRECATED: construct ``Codec(encode_backend=...)`` instead.  This
+    wrapper mutates the AMBIENT codec's config (and clears its encoder
+    cache) — the old process-global is gone, so the change is scoped to
+    that instance and the autouse test fixture can restore it."""
+    _deprecated("set_encode_backend")
+    _codec().set_encode_backend(name)
+
+
+def set_decode_backend(name: str) -> None:
+    """DEPRECATED: construct ``Codec(decode_backend=...)`` instead (see
+    :func:`set_encode_backend`)."""
+    _deprecated("set_decode_backend")
+    _codec().set_decode_backend(name)
+
+
+def encode_cache_stats() -> dict:
+    """DEPRECATED: :meth:`Codec.encode_cache_stats` on the ambient codec."""
+    _deprecated("encode_cache_stats")
+    return _codec().encode_cache_stats()
+
+
+def decode_cache_stats() -> dict:
+    """DEPRECATED: :meth:`Codec.decode_cache_stats` on the ambient codec."""
+    _deprecated("decode_cache_stats")
+    return _codec().decode_cache_stats()
+
+
+def reset_encode_cache_stats(clear_cache: bool = False) -> None:
+    """DEPRECATED: :meth:`Codec.reset_encode_cache_stats` on the ambient
+    codec."""
+    _deprecated("reset_encode_cache_stats")
+    _codec().reset_encode_cache_stats(clear_cache)
+
+
+def reset_decode_cache_stats(clear_cache: bool = False) -> None:
+    """DEPRECATED: :meth:`Codec.reset_decode_cache_stats` on the ambient
+    codec."""
+    _deprecated("reset_decode_cache_stats")
+    _codec().reset_decode_cache_stats(clear_cache)
+
+
+def slice_stacked(ct: CompressedTensor, index: int) -> CompressedTensor:
+    """Layer ``index`` of a stacked tensor as a standalone CompressedTensor
+    (stateless; also exported as ``repro.core.slice_stacked``)."""
+    streams = jax.tree.map(lambda a: a[index], ct.streams)
+    return dataclasses.replace(ct, streams=streams)
+
+
+def _encoder_key(fmt_name: str, p: EnecParams, block_elems: int) -> tuple:
+    """Ambient codec's encoder-bucket key (kept for the dispatch-count
+    tests; prefer ``Codec.plan_encode`` for bucket inspection)."""
+    return _codec()._encoder_key(fmt_name, p, block_elems)
+
+
+def _decoder_key(fmt_name: str, p: EnecParams, block_elems: int) -> tuple:
+    """Ambient codec's decoder-bucket key (see :func:`_encoder_key`)."""
+    return _codec()._decoder_key(fmt_name, p, block_elems)
+
+
+# Legacy jit'd entry points: one fused program around the whole inverse
+# (decode + reshape + astype), bound to the ambient codec at trace time.
+def _decompress_array_ambient(ct: CompressedTensor):
+    return _codec().decompress_array(ct)
+
+
+def _decompress_stacked_ambient(ct: CompressedTensor):
+    return _codec().decompress_stacked(ct)
+
+
+decompress_on_device = jax.jit(_decompress_array_ambient)
+decompress_stacked_on_device = jax.jit(_decompress_stacked_ambient)

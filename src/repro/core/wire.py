@@ -45,7 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import bitio, codec
+from . import bitio
+from . import codec as block_codec
 from .api import CompressedTensor
 from .codec import BlockStreams
 from .dtypes import FORMATS
@@ -64,29 +65,34 @@ class WireError(ValueError):
 
 
 # ---------------------------------------------------------------------------
-# host<->device transfer accounting
+# host<->device transfer accounting (instance-scoped on the codec)
 # ---------------------------------------------------------------------------
 
-_transfer = {"h2d_bytes": 0, "h2d_arrays": 0}
+def _ambient_codec():
+    from .codec_api import current_codec  # lazy: wire loads before codec_api
+    return current_codec()
 
 
 def reset_transfer_stats() -> None:
-    for k in _transfer:
-        _transfer[k] = 0
+    """Reset the AMBIENT codec's transfer counter (module-level
+    convenience; prefer :meth:`Codec.reset_transfer_stats`)."""
+    _ambient_codec().reset_transfer_stats()
 
 
 def transfer_stats() -> dict:
     """Bytes staged host->device by wire deserialization (and the checkpoint
-    loader's raw-leaf uploads).  The compressed-restore acceptance test uses
-    this to prove no dense weight ever crossed the host->device link."""
-    return dict(_transfer)
+    loader's raw-leaf uploads) through the AMBIENT codec.  The compressed-
+    restore acceptance test uses this to prove no dense weight ever crossed
+    the host->device link.  Prefer :meth:`Codec.transfer_stats` — each codec
+    instance owns its own counter."""
+    return _ambient_codec().transfer_stats()
 
 
-def h2d(arr):
-    """Upload one host array to the default device, counting its bytes."""
+def h2d(arr, codec=None):
+    """Upload one host array to the default device, counting its bytes on
+    ``codec`` (default: the ambient codec)."""
     arr = np.asarray(arr)
-    _transfer["h2d_bytes"] += arr.nbytes
-    _transfer["h2d_arrays"] += 1
+    (codec or _ambient_codec()).count_h2d(arr.nbytes)
     return jnp.asarray(arr)
 
 
@@ -108,6 +114,24 @@ def frame(payload: bytes) -> bytes:
 
 def framed_nbytes(payload_len: int) -> int:
     return FRAME_HEADER_BYTES + payload_len
+
+
+# record header layout, matching to_wire byte for byte: magic/mode/fmt/stack
+# ("<IBBH"=8) + ndim ("<I"=4) + shape (8*ndim) + dtype tag ("<8s"=8) +
+# block_elems/shards ("<II"=8); enec records add params ("<5i"=20) and the
+# nblocks field ("<I"=4)
+_RECORD_COMMON_BYTES = 8 + 4 + 8 + 8
+_RECORD_PARAMS_BYTES = 20 + 4
+
+
+def record_overhead_bytes(mode: str, ndim: int) -> int:
+    """Exact per-record overhead of a FRAMED wire record: frame header plus
+    the record header for ``ndim`` shape dims.  Everything in
+    ``frame(to_wire(ct))`` that is not stream/payload bytes — the single
+    source of truth for ``CompressedTensor.nbytes_wire`` accounting,
+    regression-tested against the serializer in tests/test_codec_api.py."""
+    base = FRAME_HEADER_BYTES + _RECORD_COMMON_BYTES + 8 * ndim
+    return base + (_RECORD_PARAMS_BYTES if mode == "enec" else 0)
 
 
 def read_frame(buf, off: int = 0):
@@ -163,7 +187,7 @@ def _flat_streams(ct: CompressedTensor) -> BlockStreams:
     flattened into the block dim (shared layout contract:
     ``codec.flatten_blocks``)."""
     s = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), ct.streams)
-    return codec.flatten_blocks(s)
+    return block_codec.flatten_blocks(s)
 
 
 def to_wire(ct: CompressedTensor, *, stacked: bool = False) -> bytes:
@@ -218,12 +242,13 @@ def _expected_raw_nbytes(mode: str, shape, dtype_str: str) -> int:
     return int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype_str).itemsize
 
 
-def from_wire(buf) -> CompressedTensor:
+def from_wire(buf, codec=None) -> CompressedTensor:
     """Parse one record from an EXACT buffer slice (a framed payload or a
     whole v1 blob file).  Every field is validated; short buffers, trailing
     garbage, unknown tags and impossible stream lengths raise
-    :class:`WireError`.  Streams are uploaded through :func:`h2d`, so the
-    transfer counter sees exactly the compressed bytes.
+    :class:`WireError`.  Streams are uploaded through :func:`h2d`, so
+    ``codec``'s transfer counter (default: the ambient codec's) sees
+    exactly the compressed bytes.
     """
     view = memoryview(buf)
     total = len(view)
@@ -258,7 +283,7 @@ def from_wire(buf) -> CompressedTensor:
                 f"{mode} record carries {raw.nbytes} payload bytes, "
                 f"expected {expect} for shape {shape} dtype {dtype_str}")
         return CompressedTensor(
-            streams=None, raw_bytes=h2d(raw),
+            streams=None, raw_bytes=h2d(raw, codec),
             fmt_name=_FMT_FROM_TAG.get(fmt_tag, "bf16"), params=None,
             shape=shape, dtype_str=dtype_str, block_elems=block_elems,
             shards=shards, mode=mode)
@@ -294,7 +319,7 @@ def from_wire(buf) -> CompressedTensor:
         raise WireError("high_len vector truncated")
     high_len = np.frombuffer(view, np.uint32, nblocks, off).astype(np.int32)
     off += 4 * nblocks
-    widths = codec.stream_shapes(block_elems, fmt, p)
+    widths = block_codec.stream_shapes(block_elems, fmt, p)
     mask = take(widths["mask"], "mask")
     low = take(widths["low"], "low")
     raw = take(widths["raw"], "raw")
@@ -335,7 +360,8 @@ def from_wire(buf) -> CompressedTensor:
 
     def relayout(a):
         tail = a.shape[1:]
-        return h2d(np.ascontiguousarray(a.reshape(lead + (flat,) + tail)))
+        return h2d(np.ascontiguousarray(a.reshape(lead + (flat,) + tail)),
+                   codec)
 
     streams = BlockStreams(
         mask=relayout(mask), low=relayout(low), high=relayout(high),
@@ -346,7 +372,7 @@ def from_wire(buf) -> CompressedTensor:
         shards=shards, mode="enec")
     # the exact high bits are in hand — prefill the wire-size cache so later
     # nbytes_wire() calls never force a device sync
-    ct._set_wire_bytes(int(np.asarray(high_len, np.int64).sum()))
+    ct._set_wire_bytes(high_len)
     return ct
 
 

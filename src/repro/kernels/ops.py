@@ -40,14 +40,14 @@ def _idd_scan_jit(x, use_pallas: bool):
 def idd_scan(x, use_pallas=None):
     """Batched inclusive prefix sum (B, N) -> (B, N) int32.
 
-    ``use_pallas=None`` (default) defers to the pipeline's backend
-    selection (``core.api.set_encode_backend``), like the codec entries the
+    ``use_pallas=None`` (default) defers to the ambient codec's encode
+    backend (``repro.core.current_codec()``), like the codec entries the
     batched pipeline caches — the seed hard-defaulted to the Pallas path in
     interpreter mode regardless of backend.
     """
     if use_pallas is None:
-        from repro.core import api as _api  # lazy: avoids import cycle
-        use_pallas = _api.encode_cache_stats()["backend"] == "pallas"
+        from repro.core.codec_api import current_codec  # lazy: avoids cycle
+        use_pallas = current_codec().config.encode_backend == "pallas"
     return _idd_scan_jit(x, use_pallas)
 
 

@@ -69,5 +69,5 @@ def tiled_matmul_ref(x, w):
 def decompress_matmul_ref(x, ct: CompressedTensor, k: int, n: int):
     """Decompress-untile-then-matmul: the fused kernel must match this
     *bit-exactly* (both sides realize :func:`tiled_matmul_ref`)."""
-    from repro.core.api import untile_matmul_weight
-    return tiled_matmul_ref(x, untile_matmul_weight(ct, k, n))
+    from repro.core.codec_api import current_codec
+    return tiled_matmul_ref(x, current_codec().untile_matmul_weight(ct, k, n))

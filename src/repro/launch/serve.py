@@ -33,33 +33,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
+from repro.core.codec_api import Codec, use_codec
 from repro.models import build_model
 from repro.runtime.streaming import assign_weight_modes, stream_stats
 
 
-def _restore_params(args, model, mode):
-    """--ckpt: weights come from the checkpoint, never from init."""
+def _restore_params(args, model, mode, codec):
+    """--ckpt: weights come from the checkpoint, never from init.  The
+    launcher's explicit codec owns the restore: its transfer counter and
+    decoder cache stats are what gets reported."""
     from repro.checkpoint.ckpt import CheckpointManager
-    from repro.core import wire
-    from repro.core.api import decode_cache_stats, reset_decode_cache_stats
 
-    mgr = CheckpointManager(args.ckpt)
+    mgr = CheckpointManager(args.ckpt, codec=codec)
     manifest = mgr.manifest()
     names = {e["name"] for e in manifest["leaves"]}
     # train-loop checkpoints are saved as {"params": ..., "opt": ...};
     # serving checkpoints hold the params tree at the root
     prefix = "params" if any(n.startswith("params/") for n in names) else ""
     like = jax.eval_shape(model.init, jax.random.key(0))
-    wire.reset_transfer_stats()
-    reset_decode_cache_stats()
+    codec.reset_transfer_stats()
+    codec.reset_decode_cache_stats()
     t0 = time.perf_counter()
     params, _ = mgr.load_for_serving(like, mode=mode, prefix=prefix,
                                      min_bytes=args.min_bytes,
                                      shards=args.shards)
     jax.block_until_ready(jax.tree.leaves(params))
     dt = time.perf_counter() - t0
-    ts = wire.transfer_stats()
-    dst = decode_cache_stats()
+    ts = codec.transfer_stats()
+    dst = codec.decode_cache_stats()
     print(f"[launch.serve] restored step {manifest['step']} from "
           f"{args.ckpt} in {dt:.2f}s "
           f"(h2d {ts['h2d_bytes'] / 1e6:.1f} MB compressed, "
@@ -85,6 +86,10 @@ def main():
                     help="smallest leaf worth compressing")
     ap.add_argument("--shards", type=int, default=2,
                     help="stream-mode TP shard count for the block dim")
+    ap.add_argument("--codec-backend", default="reference",
+                    choices=("reference", "pallas"),
+                    help="encode/decode backend of the launcher's Codec "
+                         "instance (docs/API.md)")
     ap.add_argument("--ckpt", default=None, metavar="DIR",
                     help="restore weights from an ENEC checkpoint via "
                          "load_for_serving (docs/CHECKPOINT.md)")
@@ -102,13 +107,18 @@ def main():
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = dataclasses.replace(cfg, scan_layers=True)
     model = build_model(cfg)
+    # one explicit Codec instance owns this server's compression state —
+    # caches, cache stats, and the h2d transfer counter are all scoped to
+    # it, so a second model in the same process cannot perturb them
+    codec = Codec(encode_backend=args.codec_backend,
+                  decode_backend=args.codec_backend)
     if args.ckpt:
-        params = _restore_params(args, model, mode)
+        params = _restore_params(args, model, mode, codec)
     else:
         params = model.init(jax.random.key(0))
         params = assign_weight_modes(params, mode=mode,
                                      min_bytes=args.min_bytes,
-                                     shards=args.shards)
+                                     shards=args.shards, codec=codec)
         if args.save_ckpt:
             # the handle tree is saved directly (its stream bundles become
             # the records), so the weights are compressed exactly once
@@ -117,7 +127,8 @@ def main():
                 args.save_ckpt,
                 serving_layout=None if mode == "dense" else mode,
                 serving_min_bytes=args.min_bytes,
-                serving_shards=args.shards)
+                serving_shards=args.shards,
+                codec=codec)
             t0 = time.perf_counter()
             mgr.save(0, {"params": params}, blocking=True)
             print(f"[launch.serve] saved serving checkpoint to "
@@ -139,29 +150,33 @@ def main():
         logits, cache = model.decode_fn(p, cache, tok)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, {"tokens": prompts})
-    logits.block_until_ready()
-    ttft = time.perf_counter() - t0
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    toks = [tok]
-    if args.tokens > 1:
+    # the jitted steps trace under this codec: streamed handles decode
+    # through ITS compile caches, not the process default's
+    with use_codec(codec):
         t0 = time.perf_counter()
-        for _ in range(args.tokens - 1):
-            tok, cache = decode_step(params, cache, tok)
-            toks.append(tok)
-        jax.block_until_ready(tok)
-        dt = time.perf_counter() - t0
-        steps = args.tokens - 1
-        tpot = dt / steps
-        tok_s = args.batch * steps / dt
-        print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
-              f"TPOT={tpot*1e3:.1f}ms tok/s={tok_s:.1f} mode={mode}")
-    else:
-        # a single token never enters the decode loop — timing it would
-        # divide by ~0 and print inf/garbage tok/s, so report TTFT only
-        print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
-              f"(prefill only; --tokens 1 has no decode steps) mode={mode}")
+        logits, cache = prefill(params, {"tokens": prompts})
+        logits.block_until_ready()
+        ttft = time.perf_counter() - t0
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = [tok]
+        if args.tokens > 1:
+            t0 = time.perf_counter()
+            for _ in range(args.tokens - 1):
+                tok, cache = decode_step(params, cache, tok)
+                toks.append(tok)
+            jax.block_until_ready(tok)
+            dt = time.perf_counter() - t0
+            steps = args.tokens - 1
+            tpot = dt / steps
+            tok_s = args.batch * steps / dt
+            print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
+                  f"TPOT={tpot*1e3:.1f}ms tok/s={tok_s:.1f} mode={mode}")
+        else:
+            # a single token never enters the decode loop — timing it would
+            # divide by ~0 and print inf/garbage tok/s, so report TTFT only
+            print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
+                  f"(prefill only; --tokens 1 has no decode steps) "
+                  f"mode={mode}")
     print("[launch.serve] seq0:", jnp.stack(toks, 1)[0].tolist())
 
 

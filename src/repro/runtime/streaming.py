@@ -36,8 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import (SUPPORTED_FLOAT_DTYPES, CompressedTensor,
-                            abstract_compressed, compress_stacked_many,
-                            matmul_tiles)
+                            abstract_compressed, matmul_tiles)
+from repro.core.codec_api import current_codec
 from repro.core.params import EnecParams
 from repro.runtime.weights import (DenseWeight, FusedWeight,  # noqa: F401
                                    StreamedWeight, WeightHandle, is_handle,
@@ -146,7 +146,8 @@ def build_serving_handle(job: dict, ct):
 def assign_weight_modes(params, *, mode: str = "fused",
                         shared_params: Optional[EnecParams] = None,
                         min_bytes: int = MIN_STREAM_BYTES,
-                        shards: int = STREAM_SHARDS):
+                        shards: int = STREAM_SHARDS,
+                        codec=None):
     """Assign every leaf a weight-execution mode from its path, shape,
     bytes, and TP constraints; compress everything in ONE batched pipeline
     pass (``compress_stacked_many`` — O(#buckets) encode dispatches).
@@ -168,6 +169,10 @@ def assign_weight_modes(params, *, mode: str = "fused",
     Leaves that are ALREADY handles pass through untouched, so the policy
     can finish a tree that ``CheckpointManager.load_for_serving`` partially
     restored straight from wire records.
+
+    ``codec`` selects the :class:`repro.core.Codec` doing the encoding
+    (default: the ambient codec) — two models can be assigned under
+    different codecs in one process with independent caches/counters.
     """
     if mode not in WEIGHT_MODES:
         raise ValueError(f"unknown weight mode {mode!r}; "
@@ -196,8 +201,9 @@ def assign_weight_modes(params, *, mode: str = "fused",
             continue
         job["slot"] = slot
         jobs.append(job)
-    cts = compress_stacked_many([j["arr"] for j in jobs],
-                                p=shared_params, shards=shards)
+    codec = codec or current_codec()
+    cts = codec.compress_stacked_many([j["arr"] for j in jobs],
+                                      p=shared_params, shards=shards)
     for j, ct in zip(jobs, cts):
         out[j["slot"]] = build_serving_handle(j, ct)
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -210,20 +216,51 @@ def assign_weight_modes(params, *, mode: str = "fused",
 def compress_params_for_streaming(params, *,
                                   shared_params: Optional[EnecParams] = None,
                                   min_bytes: int = MIN_STREAM_BYTES,
-                                  shards: int = STREAM_SHARDS):
+                                  shards: int = STREAM_SHARDS,
+                                  codec=None, plan=None):
     """params tree -> same-structure tree with big stacked leaves replaced
     by materialize-mode StreamedWeight (the §VI-C deployment: every stream
     decompresses to a dense weight inside the step; serve output is
     bit-identical to serving the raw tree).
 
     Device-resident batched pipeline (docs/PIPELINE.md): every eligible
-    ``(L, ...)`` stack is handed to ``compress_stacked_many``, which computes
-    statistics on device (one tiny host transfer for the whole tree), runs
-    the histogram search per stack (a layer stack is one logical tensor, so
-    every layer shares static codec metadata), and encodes each stack in ONE
-    jit dispatch — no per-layer ``compress_array`` loop, no full-tensor
-    ``device_get``, no ``jnp.stack`` of stream pytrees.
+    ``(L, ...)`` stack is handed to ``Codec.compress_stacked_many``, which
+    computes statistics on device (one tiny host transfer for the whole
+    tree), runs the histogram search per stack (a layer stack is one
+    logical tensor, so every layer shares static codec metadata), and
+    encodes each stack in ONE jit dispatch — no per-layer compress loop, no
+    full-tensor ``device_get``, no ``jnp.stack`` of stream pytrees.
+
+    ``plan`` accepts the :func:`streaming_encode_plan` built for the SAME
+    (params, min_bytes, shards) — planning is not free (stats dispatches +
+    host search + block staging), so inspect-then-run callers hand the
+    inspected plan back instead of paying for it twice.
     """
+    out, treedef, eligible = _stream_jobs(params, min_bytes)
+    codec = codec or current_codec()
+    if plan is None:
+        plan = codec.plan_encode([e[2] for e in eligible], stacked=True,
+                                 p=shared_params, shards=shards)
+    elif not plan.stacked or plan.n_inputs != len(eligible) \
+            or plan.shards != shards:
+        raise ValueError(
+            f"plan does not match this tree/policy: stacked={plan.stacked} "
+            f"n_inputs={plan.n_inputs} (expected {len(eligible)}) "
+            f"shards={plan.shards} (expected {shards})")
+    cts = codec.execute(plan)
+    for (slot, leaf, _, tp_axis), ct in zip(eligible, cts):
+        if ct is None:
+            out[slot] = leaf                            # incompressible/const
+            continue
+        out[slot] = StreamedWeight(ct=ct, tp_axis=tp_axis,
+                                   layer_shape=tuple(leaf.shape[1:]),
+                                   dtype_str=str(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _stream_jobs(params, min_bytes):
+    """Shared eligibility walk of :func:`compress_params_for_streaming` and
+    :func:`streaming_encode_plan` — the two must see the same leaves."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = [None] * len(flat)
     eligible = []   # (slot, leaf, perm, tp_axis)
@@ -235,16 +272,22 @@ def compress_params_for_streaming(params, *,
         tp_axis = _tp_axis_for(pstr, leaf.shape[1:])
         perm = jnp.moveaxis(leaf, 1 + tp_axis, 1)       # (L, tp_dim, ...)
         eligible.append((slot, leaf, perm, tp_axis))
-    cts = compress_stacked_many([e[2] for e in eligible],
-                                p=shared_params, shards=shards)
-    for (slot, leaf, _, tp_axis), ct in zip(eligible, cts):
-        if ct is None:
-            out[slot] = leaf                            # incompressible/const
-            continue
-        out[slot] = StreamedWeight(ct=ct, tp_axis=tp_axis,
-                                   layer_shape=tuple(leaf.shape[1:]),
-                                   dtype_str=str(leaf.dtype))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return out, treedef, eligible
+
+
+def streaming_encode_plan(params, *,
+                          shared_params: Optional[EnecParams] = None,
+                          min_bytes: int = MIN_STREAM_BYTES,
+                          shards: int = STREAM_SHARDS, codec=None):
+    """The :class:`repro.core.EncodePlan` that
+    :func:`compress_params_for_streaming` would execute over ``params`` —
+    the whole-tree O(#buckets) dispatch guarantee as inspectable data
+    (``len(plan.buckets)`` == encode dispatches; benches and CI assert it
+    against the measured cache counters instead of trusting folklore)."""
+    _, _, eligible = _stream_jobs(params, min_bytes)
+    codec = codec or current_codec()
+    return codec.plan_encode([e[2] for e in eligible], stacked=True,
+                             p=shared_params, shards=shards)
 
 
 def decompress_sliced(p_sliced):
@@ -254,7 +297,7 @@ def decompress_sliced(p_sliced):
     return resolve(p_sliced)
 
 
-def materialize_weight_tree(tree):
+def materialize_weight_tree(tree, codec=None):
     """Inverse of :func:`assign_weight_modes` /
     :func:`compress_params_for_streaming`: every handle back to its dense
     ``(L, ...)`` leaf, batched through the decode pipeline so the whole
@@ -264,7 +307,7 @@ def materialize_weight_tree(tree):
     """
     flat, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_handle)
     slots = [i for i, leaf in enumerate(flat) if is_handle(leaf)]
-    outs = materialize_full_many([flat[i] for i in slots])
+    outs = materialize_full_many([flat[i] for i in slots], codec)
     for i, out in zip(slots, outs):
         flat[i] = out
     return jax.tree_util.tree_unflatten(treedef, flat)

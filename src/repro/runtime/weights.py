@@ -34,9 +34,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import (MATMUL_TILE, CompressedTensor, decompress_array,
-                            decompress_stacked, decompress_stacked_many,
-                            untile_matmul_weight)
+from repro.core.api import MATMUL_TILE, CompressedTensor
+from repro.core.codec_api import current_codec
 from repro.kernels.ref import tiled_matmul_ref
 
 
@@ -51,7 +50,7 @@ class WeightHandle:
     def matmul(self, x):
         raise NotImplementedError
 
-    def materialize(self):
+    def materialize(self, codec=None):
         raise NotImplementedError
 
 
@@ -62,7 +61,7 @@ class DenseWeight(WeightHandle):
     mode, and the fallback when a leaf turns out incompressible)."""
     w: jax.Array  # (..., K, N); leading (L,) when stacked
 
-    def materialize(self):
+    def materialize(self, codec=None):
         return self.w
 
     def matmul(self, x):
@@ -88,8 +87,9 @@ class StreamedWeight(WeightHandle):
     execution: str = dataclasses.field(default="materialize",
                                        metadata=dict(static=True))
 
-    def materialize(self):
-        w_perm = decompress_array(self.ct)              # moveaxis'd layout
+    def materialize(self, codec=None):
+        # moveaxis'd layout; the ambient codec decodes unless one is passed
+        w_perm = (codec or current_codec()).decompress_array(self.ct)
         w = jnp.moveaxis(w_perm, 0, self.tp_axis)
         return w.astype(jnp.dtype(self.dtype_str))
 
@@ -113,9 +113,10 @@ class FusedWeight(WeightHandle):
         from repro.kernels import ops  # lazy: keep module import light
         return ops.decompress_matmul(x, self.ct, self.k, self.n)
 
-    def materialize(self):
-        return untile_matmul_weight(self.ct, self.k, self.n).astype(
-            jnp.dtype(self.dtype_str))
+    def materialize(self, codec=None):
+        w = (codec or current_codec()).untile_matmul_weight(
+            self.ct, self.k, self.n)
+        return w.astype(jnp.dtype(self.dtype_str))
 
 
 def is_handle(x) -> bool:
@@ -172,37 +173,41 @@ def finish_materialize(handle, w_stacked):
     raise TypeError(f"not a compressed handle: {type(handle).__name__}")
 
 
-def materialize_full(handle):
+def materialize_full(handle, codec=None):
     """Materialize a STACKED handle to its original dense ``(L, ...)`` leaf
     in one decode dispatch (``materialize()`` operates on per-layer slices;
     this is the whole-stack inverse the checkpoint loader needs to restore a
     training tree from serving-layout records)."""
     if isinstance(handle, DenseWeight):
         return handle.w
-    return finish_materialize(handle, decompress_stacked(handle.ct))
+    codec = codec or current_codec()
+    return finish_materialize(handle, codec.decompress_stacked(handle.ct))
 
 
-def materialize_full_many(handles):
+def materialize_full_many(handles, codec=None):
     """:func:`materialize_full` over many handles with O(#decoder buckets)
     decode dispatches — handles sharing a bucket decode in one concatenated
-    dispatch via ``core.api.decompress_stacked_many`` (batched checkpoint
+    dispatch via ``Codec.decompress_stacked_many`` (batched checkpoint
     restore, whole-tree materialization)."""
-    decs = decompress_stacked_many(
+    codec = codec or current_codec()
+    decs = codec.decompress_stacked_many(
         [None if isinstance(h, DenseWeight) else h.ct for h in handles])
     return [h.w if isinstance(h, DenseWeight) else finish_materialize(h, d)
             for h, d in zip(handles, decs)]
 
 
-def resolve(tree):
+def resolve(tree, codec=None):
     """Per-layer handle resolution — the serve step's replacement for the
     retired ``decompressor=`` hook.  Storage-only handles (StreamedWeight in
     "materialize" execution) become dense arrays; matmul-capable handles
     pass through for the layers to execute; everything else is untouched.
     Called on layer slices inside ``lax.scan`` / the unrolled loop, so XLA
     overlaps layer l+1's decompression with layer l's compute as before.
+    ``codec`` pins the decoding codec; default is the ambient codec at
+    trace time.
     """
     def one(leaf):
         if isinstance(leaf, StreamedWeight) and leaf.execution != "matmul":
-            return leaf.materialize()
+            return leaf.materialize(codec)
         return leaf
     return jax.tree.map(one, tree, is_leaf=is_handle)

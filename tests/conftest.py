@@ -11,6 +11,25 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True)
+def _restore_default_codec():
+    """Backend/config changes must not leak across tests.
+
+    The legacy ``set_encode_backend`` / ``set_decode_backend`` wrappers
+    mutate the process-default Codec's config; before this fixture they
+    mutated process globals with no reset, so one test switching to the
+    Pallas backend silently changed every later test.  Snapshot the default
+    codec and its config, and restore both afterwards (``configure`` only
+    clears compile caches when the config actually changed, so the common
+    no-op path keeps caches warm)."""
+    from repro.core import codec_api
+    codec = codec_api.default_codec()
+    config = codec.config
+    yield
+    codec_api.set_default_codec(codec)
+    codec.configure(config)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
