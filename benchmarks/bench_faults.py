@@ -1,0 +1,106 @@
+"""ISSUE 6: restore latency under injected fault rates.
+
+Measures what reliability costs: the degraded-policy restore against the
+same restore with transient I/O faults, an injected decode failure, and a
+permanently corrupt on-disk record —
+
+  faults/restore_clean       degraded-policy load_for_serving, no faults
+                             (the policy's overhead when nothing is wrong:
+                             quarantine list stays empty, dispatch counts
+                             match the strict path)
+  faults/restore_transient   every pack read fails twice then succeeds;
+                             the retry/backoff policy absorbs it, the
+                             derived column carries the attempt counters
+  faults/restore_decode      one decode dispatch dies after the bytes
+                             arrived intact; the record is quarantined and
+                             restored from the previous step
+  faults/restore_corrupt     one byte flipped inside a committed pack
+                             record; CRC rejects it, the quarantine +
+                             prior-step fallback restores through it
+
+Two steps with identical params are saved so every fallback has an intact
+source.  Each row asserts its expected quarantine count — the bench doubles
+as a coarse fault-model regression check (the fine-grained one is
+tests/test_faults.py; the CI job is fault-smoke).
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+
+import jax
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import Codec
+from repro.models import build_model
+from repro.runtime import faults as rt_faults
+from repro.runtime.faults import FaultSpec
+
+
+def _once(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jax.tree.leaves(out)) if out is not None else None
+    return time.perf_counter() - t0, out
+
+
+def run():
+    rows = []
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True, n_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    like = jax.eval_shape(model.init, jax.random.key(0))
+
+    codec = Codec()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, serving_layout="fused",
+                                serving_min_bytes=1024, codec=codec)
+        # identical params at both steps: any fallback is bit-identical
+        mgr.save(1, {"params": params}, blocking=True)
+        mgr.save(2, {"params": params}, blocking=True)
+
+        def restore():
+            return mgr.load_for_serving(like, mode="fused", prefix="params",
+                                        min_bytes=1024, policy="degraded")
+
+        mgr.retry.reset_stats()
+        dt, _ = _once(restore)
+        rep = mgr.last_restore_report
+        assert not rep.degraded, rep.summary()
+        rows.append(("faults/restore_clean", dt * 1e6,
+                     f"s={dt:.3f};quarantined=0;"
+                     f"io_attempts={rep.retry['attempts']}"))
+
+        mgr.retry.reset_stats()
+        with rt_faults.inject(FaultSpec(kind="read", match="pack-",
+                                        times=2)):
+            dt, _ = _once(restore)
+        rep = mgr.last_restore_report
+        assert not rep.degraded and rep.retry["retries"] == 2, rep.summary()
+        rows.append(("faults/restore_transient_reads", dt * 1e6,
+                     f"s={dt:.3f};quarantined=0;"
+                     f"io_retries={rep.retry['retries']};"
+                     f"io_attempts={rep.retry['attempts']}"))
+
+        with rt_faults.inject(FaultSpec(kind="decode", times=1)):
+            dt, _ = _once(restore)
+        rep = mgr.last_restore_report
+        assert len(rep.quarantined) == 1, rep.summary()
+        rows.append(("faults/restore_decode_fault", dt * 1e6,
+                     f"s={dt:.3f};quarantined=1;"
+                     f"fallback={rep.quarantined[0].fallback!r}"))
+
+        # permanent damage last: the byte flip outlives this row
+        name, _, pos = rt_faults.flip_pack_byte(d, "", step=2)
+        dt, _ = _once(restore)
+        rep = mgr.last_restore_report
+        assert [q.name for q in rep.quarantined] == [name], rep.summary()
+        assert rep.quarantined[0].fallback, rep.summary()
+        rows.append(("faults/restore_1_corrupt", dt * 1e6,
+                     f"s={dt:.3f};quarantined=1;record={name!r};"
+                     f"byte={pos};"
+                     f"fallback={rep.quarantined[0].fallback!r}"))
+    return rows

@@ -22,6 +22,8 @@ Modules:
   bench_serve       ISSUE 2    (TTFT/TPOT/tok-s across weight-execution modes)
   bench_ckpt        ISSUE 3/4  (enec-v2 save/load + restore wall clock +
                                 decode dispatch accounting)
+  bench_faults      ISSUE 6    (restore latency under injected fault rates:
+                                transient I/O, decode failure, corruption)
 """
 from __future__ import annotations
 
@@ -36,7 +38,7 @@ from pathlib import Path
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
 SUITE_ORDER = ["ratio", "throughput", "blocksize", "ablation", "params",
-               "transfer", "pipeline", "e2e", "serve", "ckpt"]
+               "transfer", "pipeline", "e2e", "serve", "ckpt", "faults"]
 
 
 def _suite_name(mod_name: str) -> str:
@@ -86,12 +88,13 @@ def main(argv=None) -> None:
         os.environ["BENCH_SMOKE"] = "1"
 
     from . import (bench_ablation, bench_blocksize, bench_ckpt, bench_e2e,
-                   bench_params, bench_pipeline, bench_ratio, bench_serve,
-                   bench_throughput, bench_transfer)
+                   bench_faults, bench_params, bench_pipeline, bench_ratio,
+                   bench_serve, bench_throughput, bench_transfer)
     by_suite = {_suite_name(m.__name__): m for m in
                 [bench_ratio, bench_throughput, bench_blocksize,
                  bench_ablation, bench_params, bench_transfer,
-                 bench_pipeline, bench_e2e, bench_serve, bench_ckpt]}
+                 bench_pipeline, bench_e2e, bench_serve, bench_ckpt,
+                 bench_faults]}
     wanted = [s.removeprefix("bench_") for s in args.suites] or SUITE_ORDER
     unknown = [s for s in wanted if s not in by_suite]
     if unknown:

@@ -38,6 +38,16 @@ straight into ``StreamedWeight`` / ``FusedWeight`` handles — compressed
 bytes flow disk -> HBM and the dense tensor never exists on the host.
 ``load()`` still restores the bit-exact dense training tree from the same
 records (docs/CHECKPOINT.md).
+
+Reliability (docs/RELIABILITY.md): every pack/manifest read and pack write
+funnels through the manager's :class:`RetryPolicy` (transient I/O errors
+are retried with backoff+jitter) and the fault-injection hooks of
+``runtime/faults.py``.  Under ``policy="degraded"``, a record that still
+fails — corrupt frame, exhausted retries, decode failure — is quarantined
+on a :class:`RestoreReport` and restored per record from the newest
+earlier step with an intact copy, while the surviving records keep the
+batched O(#buckets) decode path.  ``policy="strict"`` (the default)
+preserves the historical abort-on-first-error contract.
 """
 from __future__ import annotations
 
@@ -59,7 +69,9 @@ import numpy as np
 from repro.core import wire as enec_wire
 from repro.core.api import SUPPORTED_FLOAT_DTYPES, slice_stacked
 from repro.core.codec_api import Codec, current_codec
+from repro.runtime import faults as rt_faults
 from repro.runtime import streaming as rt_streaming
+from repro.runtime.retry import RetryPolicy
 from repro.runtime.weights import (DenseWeight, finish_materialize,
                                    handle_from_spec, handle_spec, is_handle)
 
@@ -76,6 +88,53 @@ _NON_SERVING_ROOTS = frozenset({"opt", "opt_state", "optimizer"})
 
 class CheckpointError(RuntimeError):
     """A checkpoint could not be saved or restored."""
+
+
+RESTORE_POLICIES = ("strict", "degraded")
+
+
+@dataclasses.dataclass
+class QuarantinedRecord:
+    """One record a restore could not use: its coordinates (name, pack,
+    byte offset, length), why it was rejected, and — once the per-record
+    fallback succeeds — where the replacement bytes came from."""
+    name: str
+    pack: str
+    offset: int
+    length: int
+    cause: str
+    fallback: str = ""
+
+    def describe(self) -> str:
+        line = (f"{self.name} [{self.pack} @ {self.offset}, "
+                f"{self.length}B]: {self.cause}")
+        if self.fallback:
+            line += f" -> {self.fallback}"
+        return line
+
+
+@dataclasses.dataclass
+class RestoreReport:
+    """What a restore survived (docs/RELIABILITY.md): the quarantined
+    records with cause and fallback, plus the manager's retry-policy
+    counters — surfaced next to the codec cache stats so reliability is
+    observable, not folklore.  Every ``load``/``load_for_serving`` stashes
+    its report on ``CheckpointManager.last_restore_report``; an empty
+    quarantine list means the restore was clean."""
+    step: int
+    policy: str
+    quarantined: list = dataclasses.field(default_factory=list)
+    retry: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.quarantined)
+
+    def summary(self) -> str:
+        head = (f"RestoreReport(step={self.step}, policy={self.policy}, "
+                f"quarantined={len(self.quarantined)}, retry={self.retry})")
+        return "\n".join([head] + ["  " + q.describe()
+                                   for q in self.quarantined])
 
 
 def _tree_paths(tree):
@@ -110,6 +169,7 @@ class CheckpointManager:
     serving_min_bytes: int = rt_streaming.MIN_STREAM_BYTES
     serving_shards: int = 1
     codec: Optional[Codec] = None          # default: ambient codec at init
+    retry: Optional[RetryPolicy] = None    # default: RetryPolicy()
     _thread: Optional[threading.Thread] = None
     _exc: Optional[BaseException] = None
 
@@ -117,6 +177,11 @@ class CheckpointManager:
         self.root = Path(self.root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.last_decode_plan = None   # DecodePlan of the latest load
+        self.last_restore_report = None   # RestoreReport of the latest load
+        if self.retry is None:
+            # one policy per manager: its attempt counters aggregate every
+            # pack/manifest read and pack write this manager performs
+            self.retry = RetryPolicy()
         if self.codec is None:
             # captured once — every save/load of this manager encodes and
             # decodes through ONE codec instance (caches, counters)
@@ -321,8 +386,19 @@ class CheckpointManager:
             entry["pack"] = pack
             entry["offset"] = offsets[pack]
             entry["length"] = len(framed)
+
+            def write_framed(f=files[pack], pos=offsets[pack],
+                             name=manifest["packs"][pack]):
+                # seek back to the record's committed offset on every
+                # attempt, so a retried write after a partial one lays the
+                # frame down exactly once
+                rt_faults.check_write(name)
+                f.seek(pos)
+                f.write(framed)
+
+            self.retry.call(write_framed,
+                            describe=manifest["packs"][pack])
             offsets[pack] += len(framed)
-            files[pack].write(framed)
             raw_total += raw
             comp_total += entry["bytes"]
             manifest["leaves"].append(entry)
@@ -369,8 +445,13 @@ class CheckpointManager:
         self._gc()
 
     def _gc(self):
+        # never GC by name alone: a step whose manifest does not parse
+        # might hold the only intact copy of a record a degraded restore
+        # still needs — retention counts and deletes only steps it can
+        # actually read
         steps = sorted(p for p in self.root.glob("step_*") if p.is_dir())
-        for old in steps[: max(0, len(steps) - self.keep_last)]:
+        intact = [p for p in steps if self._try_manifest(p) is not None]
+        for old in intact[: max(0, len(intact) - self.keep_last)]:
             shutil.rmtree(old, ignore_errors=True)
         # stale tmp dirs from crashed saves would otherwise leak forever
         # (our own tmp has already been renamed away by the time GC runs)
@@ -380,10 +461,19 @@ class CheckpointManager:
     # -- load ------------------------------------------------------------
 
     def latest_step(self) -> Optional[int]:
+        """Step named by the LATEST pointer, or None when the pointer is
+        missing, unreadable, or garbage (default-step resolution then
+        falls back to the newest step directory with an intact manifest
+        instead of dying on the pointer file)."""
         ptr = self.root / "LATEST"
-        if not ptr.exists():
+        try:
+            text = ptr.read_text()
+        except OSError:
             return None
-        return int(ptr.read_text().strip().split("_")[-1])
+        try:
+            return int(text.strip().split("_")[-1])
+        except ValueError:
+            return None
 
     def manifest(self, step: Optional[int] = None) -> dict:
         """The manifest of ``step`` (default: latest) without reading any
@@ -391,20 +481,65 @@ class CheckpointManager:
         stored serving layout."""
         return self._step_dir(step)[1]
 
-    def _step_dir(self, step: Optional[int]) -> tuple:
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoint under {self.root}")
-        cdir = self.root / f"step_{step:012d}"
-        manifest_path = cdir / "manifest.json"
-        if not manifest_path.exists():
-            raise CheckpointError(f"{cdir} has no manifest.json")
+    def _try_manifest(self, cdir) -> Optional[dict]:
+        """Parse a step dir's manifest, or None if it is missing, corrupt,
+        or unreadable (reads go through the retry policy, so a transient
+        error does not misclassify an intact step)."""
+        path = cdir / "manifest.json"
         try:
-            return cdir, json.loads(manifest_path.read_text())
-        except (json.JSONDecodeError, UnicodeDecodeError) as e:
-            raise CheckpointError(
-                f"{manifest_path} is corrupt: {e}") from e
+            raw = self.retry.call(lambda: rt_faults.read_file(path),
+                                  describe=str(path))
+            return json.loads(raw.decode())
+        except (OSError, ValueError):
+            # ValueError covers JSONDecodeError and UnicodeDecodeError
+            return None
+
+    def _step_candidates(self) -> list:
+        """Step numbers to try for ``step=None``: LATEST's target first,
+        then every committed step directory, newest first."""
+        out = []
+        s = self.latest_step()
+        if s is not None:
+            out.append(s)
+        for p in sorted(self.root.glob("step_*"), reverse=True):
+            if not p.is_dir():
+                continue
+            try:
+                c = int(p.name.split("_")[-1])
+            except ValueError:
+                continue
+            if c not in out:
+                out.append(c)
+        return out
+
+    def _step_dir(self, step: Optional[int]) -> tuple:
+        """Resolve ``(cdir, manifest)``.  An EXPLICIT step must be intact
+        (a corrupt manifest raises).  ``step=None`` resolves LATEST and —
+        when the pointer dangles or its manifest is corrupt — falls back
+        to the newest earlier step whose manifest parses, so one damaged
+        file never makes the whole root unrestorable."""
+        if step is not None:
+            cdir = self.root / f"step_{step:012d}"
+            manifest_path = cdir / "manifest.json"
+            if not manifest_path.exists():
+                raise CheckpointError(f"{cdir} has no manifest.json")
+            try:
+                return cdir, json.loads(manifest_path.read_text())
+            except (json.JSONDecodeError, UnicodeDecodeError) as e:
+                raise CheckpointError(
+                    f"{manifest_path} is corrupt: {e}") from e
+        candidates = self._step_candidates()
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        causes = []
+        for c in candidates:
+            try:
+                return self._step_dir(c)
+            except CheckpointError as e:
+                causes.append(str(e))
+        raise CheckpointError(
+            "no step with an intact manifest under "
+            f"{self.root}: " + "; ".join(causes))
 
     @staticmethod
     def _require_records(names, by_name, cdir, what="records"):
@@ -423,7 +558,18 @@ class CheckpointManager:
             raise CheckpointError(f"{name}: ckpt dtype {dtype} vs model "
                                   f"{jnp.dtype(like.dtype)}")
 
-    def _iter_records(self, cdir, manifest, entries):
+    def _quarantine(self, report, e, manifest, cause) -> QuarantinedRecord:
+        """Record one failed record on ``report`` with its coordinates."""
+        packs = manifest.get("packs")
+        pack = (packs[e["pack"]] if packs is not None and "pack" in e
+                else f"t_{e.get('index', 0):05d}.enec")
+        q = QuarantinedRecord(
+            name=e["name"], pack=pack, offset=int(e.get("offset", 0)),
+            length=int(e.get("length", e.get("bytes", -1))), cause=cause)
+        report.quarantined.append(q)
+        return q
+
+    def _iter_records(self, cdir, manifest, entries, report=None):
         """Yield ``(entry, payload_bytes)`` for ``entries``, validated
         (frame length + CRC for v2 packs; declared blob size for v1
         per-leaf files), one record at a time in pack/offset order — the
@@ -431,16 +577,38 @@ class CheckpointManager:
         memory holds one record's compressed bytes, never the whole
         checkpoint (decoding is deferred into one batched pass).  Only the
         requested records are read (partial load never touches the rest of
-        the pack)."""
+        the pack).
+
+        Every read funnels through the manager's retry policy and the
+        fault-injection hooks (runtime/faults.py) — transient I/O errors
+        are absorbed here.  With ``report=None`` (strict) the first record
+        that still fails raises; with a :class:`RestoreReport` the record
+        is quarantined and skipped, and the caller arranges a per-record
+        fallback afterwards."""
         fmt = manifest.get("format", "enec-v1")
         if fmt == "enec-v1":
             for e in entries:
                 path = cdir / f"t_{e['index']:05d}.enec"
-                blob = path.read_bytes()
-                if "bytes" in e and len(blob) != e["bytes"]:
-                    raise CheckpointError(
-                        f"{path.name}: {len(blob)} bytes on disk, manifest "
-                        f"declares {e['bytes']} — truncated or corrupt")
+                try:
+                    blob = self.retry.call(
+                        lambda p=path: rt_faults.read_file(p),
+                        describe=path.name)
+                    if "bytes" in e and len(blob) != e["bytes"]:
+                        raise CheckpointError(
+                            f"{path.name}: {len(blob)} bytes on disk, "
+                            f"manifest declares {e['bytes']} — truncated "
+                            f"or corrupt")
+                except OSError as err:
+                    if report is None:
+                        raise CheckpointError(
+                            f"{path.name} ({e['name']}): {err}") from err
+                    self._quarantine(report, e, manifest, str(err))
+                    continue
+                except CheckpointError as err:
+                    if report is None:
+                        raise
+                    self._quarantine(report, e, manifest, str(err))
+                    continue
                 yield e, blob
             return
         if fmt != MANIFEST_FORMAT:
@@ -450,21 +618,33 @@ class CheckpointManager:
             by_pack.setdefault(e["pack"], []).append(e)
         for pack, es in sorted(by_pack.items()):
             path = cdir / manifest["packs"][pack]
-            with open(path, "rb") as f:
-                for e in sorted(es, key=lambda e: e["offset"]):
-                    f.seek(e["offset"])
-                    buf = f.read(e["length"])
-                    try:
-                        payload, end = enec_wire.read_frame(buf)
-                    except enec_wire.WireError as err:
+            for e in sorted(es, key=lambda e: e["offset"]):
+                try:
+                    buf = self.retry.call(
+                        lambda e=e: rt_faults.read_range(
+                            path, e["offset"], e["length"]),
+                        describe=f"{path.name}@{e['offset']}")
+                    payload, end = enec_wire.read_frame(
+                        buf, record=e["name"], pack=path.name,
+                        base_offset=e["offset"])
+                    if end != len(buf):
+                        raise enec_wire.WireError(
+                            f"frame length {end} != indexed {len(buf)}",
+                            record=e["name"], pack=path.name,
+                            offset=e["offset"])
+                except (OSError, enec_wire.WireError) as err:
+                    if isinstance(err, enec_wire.WireError):
+                        # satellite: both except sites attach (leaf name,
+                        # pack file, byte offset) to the WireError
+                        err.with_context(record=e["name"], pack=path.name,
+                                         offset=e["offset"])
+                    if report is None:
                         raise CheckpointError(
                             f"{path.name} @ {e['offset']} ({e['name']}): "
                             f"{err}") from err
-                    if end != len(buf):
-                        raise CheckpointError(
-                            f"{path.name} @ {e['offset']} ({e['name']}): "
-                            f"frame length {end} != indexed {len(buf)}")
-                    yield e, payload
+                    self._quarantine(report, e, manifest, str(err))
+                    continue
+                yield e, payload
 
     def _decode_npraw(self, e, blob):
         blob = bytes(blob)
@@ -478,16 +658,23 @@ class CheckpointManager:
         # counted on this manager's codec like every other record upload
         return enec_wire.h2d(arr.reshape(e["shape"]), self.codec)
 
-    def _record_ct(self, e, blob):
+    def _record_ct(self, e, blob, packs=None):
         """Deserialize one compressed record's payload — the compressed
         streams move to device here (counted on this manager's codec);
-        nothing is decoded yet."""
+        nothing is decoded yet.  Any :class:`WireError` leaves with the
+        record's (leaf name, pack file, byte offset) attached."""
+        pack = packs[e["pack"]] if packs is not None and "pack" in e \
+            else None
         try:
-            return enec_wire.from_wire(blob, codec=self.codec)
+            return enec_wire.from_wire(blob, codec=self.codec,
+                                       record=e["name"], pack=pack,
+                                       offset=e.get("offset"))
         except enec_wire.WireError as err:
+            err.with_context(record=e["name"], pack=pack,
+                             offset=e.get("offset"))
             raise CheckpointError(f"{e['name']}: {err}") from err
 
-    def _queue_record(self, e, blob, pending, vals, like):
+    def _queue_record(self, e, blob, pending, vals, like, packs=None):
         """One record -> either an eagerly decoded host value (``npraw``)
         or a device-resident compressed object queued on ``pending`` for
         the batched decode pass (serving-layout records become handles;
@@ -498,7 +685,7 @@ class CheckpointManager:
             self._check_leaf(name, val.shape, like)
             vals[name] = val.astype(like.dtype)
             return
-        ct = self._record_ct(e, blob)
+        ct = self._record_ct(e, blob, packs=packs)
         obj = (handle_from_spec(e["handle"], ct)
                if "handle" in e and e.get("stack") else ct)
         pending.append((name, like, obj))
@@ -527,22 +714,155 @@ class CheckpointManager:
             self._check_leaf(name, val.shape, like)
             vals[name] = val.astype(like.dtype)
 
+    def _apply_decode_faults(self, pending, manifest, by_name, report):
+        """Fault-injection hook for the decode dispatch: records matched
+        by an active "decode" fault are dropped from the batched plan
+        BEFORE it is built — quarantined (degraded) or fatal (strict) —
+        so the surviving records still decode in one replanned batched
+        pass.  No-op without an active injector."""
+        if rt_faults.active() is None:
+            return pending
+        out = []
+        for item in pending:
+            name = item[0]
+            try:
+                rt_faults.check_decode(name)
+            except rt_faults.InjectedFault as err:
+                if report is None:
+                    raise CheckpointError(
+                        f"decode failed for {name}: {err}") from err
+                self._quarantine(report, by_name.get(name, {"name": name}),
+                                 manifest, f"decode failed: {err}")
+                continue
+            out.append(item)
+        return out
+
+    def _intact_steps(self, before: Optional[int] = None) -> list:
+        """``(step, cdir, manifest)`` for every committed step whose
+        manifest parses, newest first; ``before`` excludes that step and
+        anything newer (fallback never reads forward in time)."""
+        out = []
+        for p in sorted(self.root.glob("step_*"), reverse=True):
+            if not p.is_dir():
+                continue
+            try:
+                s = int(p.name.split("_")[-1])
+            except ValueError:
+                continue
+            if before is not None and s >= before:
+                continue
+            man = self._try_manifest(p)
+            if man is not None:
+                out.append((s, p, man))
+        return out
+
+    def _fallback_restore(self, report, manifest, like_by_name, vals,
+                          pending, process=None):
+        """Per-record fallback for quarantined records: walk earlier steps
+        (newest first, intact manifests only) and restore the first intact
+        copy of each record — read, validated, shape/dtype-checked, and
+        decode-fault-checked exactly like a first-class record, so an
+        injected decode failure cannot sneak back in through the fallback.
+        ``process`` overrides how a recovered record is staged (the
+        serving restore passes its adopt-or-queue closure).  A record with
+        no intact source anywhere raises: a degraded restore never
+        fabricates weights."""
+        steps = self._intact_steps(before=manifest.get("step"))
+        for q in report.quarantined:
+            if q.fallback or q.name not in like_by_name:
+                continue
+            like = like_by_name[q.name]
+            for s, fcdir, fman in steps:
+                fe = next((e for e in fman["leaves"]
+                           if e["name"] == q.name), None)
+                if fe is None:
+                    continue
+                n_pend = len(pending)
+                try:
+                    got = False
+                    for e2, payload in self._iter_records(fcdir, fman,
+                                                          [fe]):
+                        if process is not None:
+                            process(e2, payload, like, fman, pending, vals)
+                        else:
+                            self._queue_record(e2, payload, pending, vals,
+                                               like,
+                                               packs=fman.get("packs"))
+                        got = True
+                    if not got:
+                        raise CheckpointError(
+                            f"{q.name}: record unreadable at step {s}")
+                    new = pending[n_pend:]
+                    if new:
+                        pending[n_pend:] = self._apply_decode_faults(
+                            new, fman, {q.name: fe}, None)
+                except (OSError, CheckpointError,
+                        enec_wire.WireError):
+                    # this step can't supply the record — roll back any
+                    # partial staging and walk further back in time
+                    del pending[n_pend:]
+                    vals.pop(q.name, None)
+                    continue
+                kind = ((fe.get("handle") or {}).get("kind")
+                        or fe.get("mode", "?"))
+                q.fallback = f"step {s} ({kind} record)"
+                break
+            if not q.fallback:
+                raise CheckpointError(
+                    "restore failed — no intact source for quarantined "
+                    "record(s):\n" + report.summary())
+
+    def _begin_report(self, policy, manifest) -> RestoreReport:
+        if policy not in RESTORE_POLICIES:
+            raise ValueError(f"unknown restore policy {policy!r}; "
+                             f"expected one of {RESTORE_POLICIES}")
+        return RestoreReport(step=int(manifest.get("step", -1)),
+                             policy=policy)
+
+    def _finish_report(self, report) -> None:
+        report.retry = self.retry.stats()
+        self.last_restore_report = report
+
     def load(self, like_tree, step: Optional[int] = None,
-             shardings=None):
+             shardings=None, *, policy: str = "strict"):
         """Restore into the structure of ``like_tree``; reshard to
-        ``shardings`` (elastic: any mesh) or keep host arrays."""
+        ``shardings`` (elastic: any mesh) or keep host arrays.
+
+        ``policy="strict"`` (default) aborts on the first bad record —
+        bit-exactness or nothing, the right contract for training resume.
+        ``policy="degraded"`` quarantines records that fail I/O,
+        validation, or decode and falls back per record to the newest
+        earlier step holding an intact copy; the :class:`RestoreReport`
+        (returned on ``last_restore_report``) enumerates every quarantined
+        record with cause and fallback.  A record with no intact source
+        anywhere still raises — degraded mode trades freshness, never
+        correctness."""
         cdir, manifest = self._step_dir(step)
+        report = self._begin_report(policy, manifest)
+        rep = report if policy == "degraded" else None
         names, leaves, treedef = _tree_paths(like_tree)
         by_name = {e["name"]: e for e in manifest["leaves"]}
         self._require_records(names, by_name, cdir)
         like_by_name = dict(zip(names, leaves))
+        packs = manifest.get("packs")
         vals = {}
         pending: list = []
         for e, payload in self._iter_records(cdir, manifest,
-                                             [by_name[n] for n in names]):
-            self._queue_record(e, payload, pending, vals,
-                               like_by_name[e["name"]])
+                                             [by_name[n] for n in names],
+                                             report=rep):
+            try:
+                self._queue_record(e, payload, pending, vals,
+                                   like_by_name[e["name"]], packs=packs)
+            except CheckpointError as err:
+                if rep is None:
+                    raise
+                self._quarantine(rep, e, manifest, str(err))
+        pending = self._apply_decode_faults(pending, manifest, by_name, rep)
+        if rep is not None and rep.quarantined:
+            self._fallback_restore(rep, manifest, like_by_name, vals,
+                                   pending)
         self._decode_pending(pending, vals)
+        self._finish_report(report)
         tree = jax.tree_util.tree_unflatten(treedef,
                                             [vals.pop(n) for n in names])
         if shardings is not None:
@@ -552,22 +872,35 @@ class CheckpointManager:
     # -- restore straight into serving handles ----------------------------
 
     @staticmethod
-    def _spec_serves_mode(spec: dict, mode: str) -> bool:
+    def _spec_serves_mode(spec: dict, mode: str,
+                          degraded: bool = False) -> bool:
         """Can a stored serving-layout record be adopted as-is under the
-        requested weight-execution mode?"""
+        requested weight-execution mode?
+
+        ``degraded`` relaxes the answer for a quarantined record's
+        fallback copy: any compressed handle kind executes the canonical
+        contraction bit-identically, so a damaged fused bundle may adopt a
+        prior step's stream record (and vice versa) — a capacity/latency
+        downgrade, never a numeric one.  The main pass keeps the strict
+        answer: asking for fused on an undamaged stream-layout checkpoint
+        should re-layout for fused speed, not silently keep stream
+        execution."""
         kind = spec.get("kind")
         if mode == "fused":
             return kind == "fused" or (
                 kind == "stream"
-                and spec.get("execution", "materialize") == "materialize")
+                and (degraded
+                     or spec.get("execution", "materialize")
+                     == "materialize"))
         if mode == "stream":
-            return kind == "stream"
+            return kind == "stream" or (degraded and kind == "fused")
         return False
 
     def load_for_serving(self, like_params, *, mode: str = "fused",
                          step: Optional[int] = None, prefix: str = "",
                          min_bytes: int = rt_streaming.MIN_STREAM_BYTES,
-                         shards: int = rt_streaming.STREAM_SHARDS):
+                         shards: int = rt_streaming.STREAM_SHARDS,
+                         policy: str = "strict"):
         """Restore ONLY the weight records into a serving handle tree.
 
         ``like_params`` is the (dense) params structure — ShapeDtypeStructs
@@ -581,10 +914,23 @@ class CheckpointManager:
         Everything else (plain v1/v2 records, or a layout mismatch) is
         decompressed on device and handed to ``assign_weight_modes``, which
         passes existing handles through untouched.
-        """
+
+        ``policy="degraded"`` keeps serving through damage: a record that
+        fails I/O, validation, or decode is quarantined and restored from
+        the newest earlier step holding an intact copy — adopted as a
+        handle when its layout serves ``mode`` (a damaged fused bundle
+        degrades to the prior step's stream or dense record), decoded and
+        re-assigned by the policy otherwise.  The rest of the tree restores
+        batched exactly as before (the DecodePlan replans only the
+        surviving buckets); logits stay bit-identical because every handle
+        mode executes the same canonical contraction.  The
+        :class:`RestoreReport` on ``last_restore_report`` enumerates each
+        quarantined record's cause and fallback."""
         if mode not in rt_streaming.WEIGHT_MODES:
             raise ValueError(f"unknown weight mode {mode!r}")
         cdir, manifest = self._step_dir(step)
+        report = self._begin_report(policy, manifest)
+        rep = report if policy == "degraded" else None
         names, leaves, treedef = _tree_paths(like_params)
         full = [f"{prefix}/{n}" if prefix else n for n in names]
         by_name = {e["name"]: e for e in manifest["leaves"]}
@@ -592,17 +938,29 @@ class CheckpointManager:
         like_by_name = dict(zip(full, leaves))
         vals = {}
         pending: list = []
-        for e, payload in self._iter_records(cdir, manifest,
-                                             [by_name[n] for n in full]):
-            name, like = e["name"], like_by_name[e["name"]]
+
+        def serve_record(e, payload, like, man, pending, vals):
+            """Adopt a matching serving-layout record as a handle, else
+            queue it for the batched decode — shared by the main pass and
+            the per-record step fallback so a recovered record takes
+            exactly the path it would have taken undamaged."""
+            name = e["name"]
             spec = e.get("handle")
+            # a record arriving here while already quarantined is the
+            # FALLBACK copy from an earlier step — adoption relaxes to any
+            # bit-identical handle kind (see _spec_serves_mode)
+            is_fallback = rep is not None and any(
+                q.name == name for q in rep.quarantined)
             if spec and spec["kind"] != "dense" and e.get("stack") \
-                    and mode != "dense" and self._spec_serves_mode(spec, mode):
+                    and mode != "dense" \
+                    and self._spec_serves_mode(spec, mode,
+                                               degraded=is_fallback):
                 leaf_shape = (int(e["stack"]),) + (
                     tuple(spec["layer_shape"]) if spec["kind"] == "stream"
                     else (int(spec["k"]), int(spec["n"])))
-                self._check_leaf(name, leaf_shape, like, dtype=spec["dtype"])
-                ct = self._record_ct(e, payload)
+                self._check_leaf(name, leaf_shape, like,
+                                 dtype=spec["dtype"])
+                ct = self._record_ct(e, payload, packs=man.get("packs"))
                 # adopt only when the stored stream layout matches the
                 # requested TP width (fused mode forces shards=1) — a
                 # mismatch joins the batched decode + device re-layout
@@ -610,11 +968,28 @@ class CheckpointManager:
                 req_shards = 1 if mode == "fused" else shards
                 if ct.shards == req_shards:
                     vals[name] = handle_from_spec(spec, ct)
-                    continue
+                    return
                 pending.append((name, like, handle_from_spec(spec, ct)))
-                continue
-            self._queue_record(e, payload, pending, vals, like)
+                return
+            self._queue_record(e, payload, pending, vals, like,
+                               packs=man.get("packs"))
+
+        for e, payload in self._iter_records(cdir, manifest,
+                                             [by_name[n] for n in full],
+                                             report=rep):
+            try:
+                serve_record(e, payload, like_by_name[e["name"]], manifest,
+                             pending, vals)
+            except CheckpointError as err:
+                if rep is None:
+                    raise
+                self._quarantine(rep, e, manifest, str(err))
+        pending = self._apply_decode_faults(pending, manifest, by_name, rep)
+        if rep is not None and rep.quarantined:
+            self._fallback_restore(rep, manifest, like_by_name, vals,
+                                   pending, process=serve_record)
         self._decode_pending(pending, vals)
+        self._finish_report(report)
         tree = jax.tree_util.tree_unflatten(treedef,
                                             [vals.pop(n) for n in full])
         tree = rt_streaming.assign_weight_modes(

@@ -61,7 +61,43 @@ _MODE_FROM_TAG = {v: k for k, v in _MODE_TAGS.items()}
 
 class WireError(ValueError):
     """A wire record or frame failed validation (truncated, corrupt, or not
-    an ENEC record at all)."""
+    an ENEC record at all).
+
+    Carries optional record context — ``record`` (leaf name), ``pack``
+    (pack file name), ``offset`` (absolute byte offset of the frame in the
+    pack) — so a checkpoint quarantine line is actionable, not just "bad
+    frame magic".  Raise sites that know only part of the context fill
+    what they have; outer layers add the rest via :meth:`with_context`
+    (first writer wins, so the most precise coordinates survive).
+    """
+
+    def __init__(self, message, *, record=None, pack=None, offset=None):
+        super().__init__(message)
+        self.record = record
+        self.pack = pack
+        self.offset = offset
+
+    def with_context(self, *, record=None, pack=None, offset=None):
+        """Fill any UNSET context fields and return self (chainable at
+        ``except`` sites)."""
+        if self.record is None:
+            self.record = record
+        if self.pack is None:
+            self.pack = pack
+        if self.offset is None:
+            self.offset = offset
+        return self
+
+    def __str__(self):
+        base = self.args[0] if self.args else ""
+        ctx = []
+        if self.record is not None:
+            ctx.append(f"record={self.record}")
+        if self.pack is not None:
+            ctx.append(f"pack={self.pack}")
+        if self.offset is not None:
+            ctx.append(f"offset={self.offset}")
+        return f"{base} [{', '.join(ctx)}]" if ctx else str(base)
 
 
 # ---------------------------------------------------------------------------
@@ -134,35 +170,44 @@ def record_overhead_bytes(mode: str, ndim: int) -> int:
     return base + (_RECORD_PARAMS_BYTES if mode == "enec" else 0)
 
 
-def read_frame(buf, off: int = 0):
+def read_frame(buf, off: int = 0, *, record=None, pack=None,
+               base_offset=None):
     """Validate and return ``(payload, next_off)`` for the frame at ``off``.
 
     Checks magic, version, that the declared payload length fits the buffer,
     and the payload CRC32.  Raises :class:`WireError` on any mismatch — a
     truncated pack file or a flipped bit can never be silently decoded.
+    ``record``/``pack``/``base_offset`` are optional caller context: the
+    checkpoint loader passes the leaf name, pack file, and the frame's
+    absolute pack offset so every raise carries actionable coordinates.
     """
+    def _err(msg):
+        return WireError(
+            msg, record=record, pack=pack,
+            offset=None if base_offset is None else base_offset)
+
     view = memoryview(buf)
     if off + FRAME_HEADER_BYTES > len(view):
-        raise WireError(
+        raise _err(
             f"frame header truncated at offset {off}: need "
             f"{FRAME_HEADER_BYTES} bytes, have {len(view) - off}")
     magic, version, flags, length, crc = _FRAME_HDR.unpack_from(view, off)
     if magic != FRAME_MAGIC:
-        raise WireError(f"bad frame magic {magic:#x} at offset {off} "
-                        f"(expected {FRAME_MAGIC:#x})")
+        raise _err(f"bad frame magic {magic:#x} at offset {off} "
+                   f"(expected {FRAME_MAGIC:#x})")
     if version != FRAME_VERSION:
-        raise WireError(f"unsupported frame version {version} at offset {off}")
+        raise _err(f"unsupported frame version {version} at offset {off}")
     if flags != 0:
-        raise WireError(f"unknown frame flags {flags:#x} at offset {off}")
+        raise _err(f"unknown frame flags {flags:#x} at offset {off}")
     start = off + FRAME_HEADER_BYTES
     if start + length > len(view):
-        raise WireError(
+        raise _err(
             f"frame payload truncated at offset {off}: declares {length} "
             f"bytes, only {len(view) - start} available")
     payload = view[start : start + length]
     got = zlib.crc32(payload)
     if got != crc:
-        raise WireError(
+        raise _err(
             f"frame CRC mismatch at offset {off}: stored {crc:#010x}, "
             f"computed {got:#010x} — record is corrupt")
     return payload, start + length
@@ -242,14 +287,20 @@ def _expected_raw_nbytes(mode: str, shape, dtype_str: str) -> int:
     return int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype_str).itemsize
 
 
-def from_wire(buf, codec=None) -> CompressedTensor:
+def from_wire(buf, codec=None, *, record=None, pack=None,
+              offset=None) -> CompressedTensor:
     """Parse one record from an EXACT buffer slice (a framed payload or a
     whole v1 blob file).  Every field is validated; short buffers, trailing
     garbage, unknown tags and impossible stream lengths raise
     :class:`WireError`.  Streams are uploaded through :func:`h2d`, so
     ``codec``'s transfer counter (default: the ambient codec's) sees
-    exactly the compressed bytes.
+    exactly the compressed bytes.  ``record``/``pack``/``offset`` are
+    optional caller context attached to every raise (leaf name, pack file,
+    absolute pack offset — what a quarantine line needs).
     """
+    def _err(msg):
+        return WireError(msg, record=record, pack=pack, offset=offset)
+
     view = memoryview(buf)
     total = len(view)
     off = 0
@@ -257,29 +308,31 @@ def from_wire(buf, codec=None) -> CompressedTensor:
         magic, mode_tag, fmt_tag, stack = struct.unpack_from("<IBBH", view, off)
         off += 8
         if magic != MAGIC:
-            raise WireError(f"bad ENEC wire magic {magic:#x}")
+            raise _err(f"bad ENEC wire magic {magic:#x}")
         if mode_tag not in _MODE_FROM_TAG:
-            raise WireError(f"unknown mode tag {mode_tag}")
+            raise _err(f"unknown mode tag {mode_tag}")
         mode = _MODE_FROM_TAG[mode_tag]
         (ndim,) = struct.unpack_from("<I", view, off); off += 4
         if ndim > 16:
-            raise WireError(f"implausible ndim {ndim}")
+            raise _err(f"implausible ndim {ndim}")
         if off + 8 * ndim > total:
-            raise WireError(f"record truncated in the {ndim}-dim shape")
+            raise _err(f"record truncated in the {ndim}-dim shape")
         shape = tuple(np.frombuffer(view, np.int64, ndim, off).tolist())
         off += 8 * ndim
         (dtype_raw,) = struct.unpack_from("<8s", view, off); off += 8
         dtype_str = bytes(dtype_raw).rstrip(b"\x00").decode()
         jnp.dtype(dtype_str)   # must name a real dtype
         block_elems, shards = struct.unpack_from("<II", view, off); off += 8
+    except WireError:
+        raise
     except (struct.error, UnicodeDecodeError, TypeError) as e:
-        raise WireError(f"corrupt record header: {e}") from None
+        raise _err(f"corrupt record header: {e}") from None
 
     if mode in ("raw", "const"):
         raw = np.frombuffer(view, np.uint8, -1, off)
         expect = _expected_raw_nbytes(mode, shape, dtype_str)
         if raw.nbytes != expect:
-            raise WireError(
+            raise _err(
                 f"{mode} record carries {raw.nbytes} payload bytes, "
                 f"expected {expect} for shape {shape} dtype {dtype_str}")
         return CompressedTensor(
@@ -289,26 +342,26 @@ def from_wire(buf, codec=None) -> CompressedTensor:
             shards=shards, mode=mode)
 
     if fmt_tag not in _FMT_FROM_TAG:
-        raise WireError(f"unknown float format tag {fmt_tag}")
+        raise _err(f"unknown float format tag {fmt_tag}")
     fmt = FORMATS[_FMT_FROM_TAG[fmt_tag]]
     try:
         b, n, m, L, l = struct.unpack_from("<5i", view, off); off += 20
         (nblocks,) = struct.unpack_from("<I", view, off); off += 4
     except struct.error as e:
-        raise WireError(f"record truncated in params: {e}") from None
+        raise _err(f"record truncated in params: {e}") from None
     p = EnecParams(b=b, n=n, m=m, L=L, l=l)
     if not (0 <= m <= n <= 32 and L >= 1 and block_elems >= 1):
-        raise WireError(f"implausible params {p.astuple()} "
-                        f"block_elems={block_elems}")
+        raise _err(f"implausible params {p.astuple()} "
+                   f"block_elems={block_elems}")
     if shards < 1 or nblocks % (max(stack, 1) * shards):
-        raise WireError(f"nblocks={nblocks} not divisible by "
-                        f"stack={stack} * shards={shards} — corrupt header")
+        raise _err(f"nblocks={nblocks} not divisible by "
+                   f"stack={stack} * shards={shards} — corrupt header")
 
     def take(nb, what):
         nonlocal off
         need = nblocks * nb
         if off + need > total:
-            raise WireError(
+            raise _err(
                 f"{what} stream truncated: need {need} bytes at offset "
                 f"{off}, record has {total - off} left")
         arr = np.frombuffer(view, np.uint8, need, off).reshape(nblocks, nb)
@@ -316,7 +369,7 @@ def from_wire(buf, codec=None) -> CompressedTensor:
         return arr
 
     if off + 4 * nblocks > total:
-        raise WireError("high_len vector truncated")
+        raise _err("high_len vector truncated")
     high_len = np.frombuffer(view, np.uint32, nblocks, off).astype(np.int32)
     off += 4 * nblocks
     widths = block_codec.stream_shapes(block_elems, fmt, p)
@@ -330,21 +383,21 @@ def from_wire(buf, codec=None) -> CompressedTensor:
         for blk in range(nblocks):
             bits = int(high_len[blk])
             if bits < 0 or bits > max_bits:
-                raise WireError(
+                raise _err(
                     f"block {blk}: high_len {bits} bits exceeds the "
                     f"{max_bits}-bit block bound — corrupt record")
             nbytes = (bits + 7) // 8
             if off + nbytes > total:
-                raise WireError(f"block {blk}: high stream truncated")
+                raise _err(f"block {blk}: high stream truncated")
             count = bits // width
             try:
                 dense[blk, :count] = bitio.np_unpack_bits_exact(
                     view[off : off + nbytes], count, width)
             except ValueError as e:
-                raise WireError(f"block {blk}: {e}") from None
+                raise _err(f"block {blk}: {e}") from None
             off += nbytes
     if off != total:
-        raise WireError(
+        raise _err(
             f"record has {total - off} trailing bytes after the high "
             f"stream — length mismatch (corrupt or mis-framed)")
     high = bitio.pack_fixed(dense, width, xp=np)

@@ -21,6 +21,12 @@ can produce and consume its own checkpoint.
         --batch 4 --tokens 8 --mode fused --save-ckpt /tmp/ck
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --batch 4 --tokens 8 --mode fused --ckpt /tmp/ck
+
+Reliability (docs/RELIABILITY.md): restores run with record quarantine and
+per-record fallback.  ``--degraded`` (default) serves with the fallback
+handles and prints the RestoreReport; ``--strict`` exits nonzero with the
+full quarantine list.  :data:`HEALTH` exposes the readiness state
+(initializing/restoring/ready/degraded/failed) for probes.
 """
 from __future__ import annotations
 
@@ -35,13 +41,44 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.core.codec_api import Codec, use_codec
 from repro.models import build_model
-from repro.runtime.streaming import assign_weight_modes, stream_stats
+from repro.runtime.streaming import assign_weight_modes, mode_mix, \
+    stream_stats
 
 
-def _restore_params(args, model, mode, codec):
+@dataclasses.dataclass
+class ServerHealth:
+    """Readiness/health state of the serving process — the launcher's
+    answer to a load balancer's probe (docs/RELIABILITY.md).
+
+    States: ``initializing`` -> ``restoring`` -> ``ready`` | ``degraded``
+    (serving with fallback handles after a quarantined restore) |
+    ``failed`` (strict policy refused a damaged restore, or no restore
+    source at all — the process exits nonzero).
+    """
+    state: str = "initializing"
+    detail: str = ""
+
+    def ready(self) -> bool:
+        """Should a load balancer route traffic here?  Degraded serving
+        is still correct serving (logits are bit-identical across handle
+        modes) — it answers yes."""
+        return self.state in ("ready", "degraded")
+
+
+# module-level so smoke tests and embedding code can probe the last run's
+# health without threading it through main()
+HEALTH = ServerHealth()
+
+
+def _restore_params(args, model, mode, codec, policy):
     """--ckpt: weights come from the checkpoint, never from init.  The
     launcher's explicit codec owns the restore: its transfer counter and
-    decoder cache stats are what gets reported."""
+    decoder cache stats are what gets reported.
+
+    The restore always runs under ``policy="degraded"`` so the FULL
+    quarantine list is collected in one pass; main() then decides between
+    serving degraded and exiting nonzero (--strict).  Returns
+    ``(params, RestoreReport)``."""
     from repro.checkpoint.ckpt import CheckpointManager
 
     mgr = CheckpointManager(args.ckpt, codec=codec)
@@ -56,17 +93,21 @@ def _restore_params(args, model, mode, codec):
     t0 = time.perf_counter()
     params, _ = mgr.load_for_serving(like, mode=mode, prefix=prefix,
                                      min_bytes=args.min_bytes,
-                                     shards=args.shards)
+                                     shards=args.shards, policy="degraded")
     jax.block_until_ready(jax.tree.leaves(params))
     dt = time.perf_counter() - t0
     ts = codec.transfer_stats()
     dst = codec.decode_cache_stats()
+    report = mgr.last_restore_report
+    rs = report.retry if report is not None else {}
     print(f"[launch.serve] restored step {manifest['step']} from "
           f"{args.ckpt} in {dt:.2f}s "
           f"(h2d {ts['h2d_bytes'] / 1e6:.1f} MB compressed, "
           f"ratio {manifest.get('ratio', 0):.3f}x, "
-          f"{dst['dispatches']} decode dispatches)")
-    return params
+          f"{dst['dispatches']} decode dispatches, "
+          f"io retries {rs.get('retries', 0)}/"
+          f"{rs.get('attempts', 0)} attempts)")
+    return params, report
 
 
 def main():
@@ -96,6 +137,14 @@ def main():
     ap.add_argument("--save-ckpt", default=None, metavar="DIR",
                     help="write an enec-v2 serving-layout checkpoint of "
                          "the initialized weights, then serve")
+    pol = ap.add_mutually_exclusive_group()
+    pol.add_argument("--strict", action="store_true",
+                     help="refuse a damaged restore: exit nonzero with the "
+                          "full quarantine list instead of serving "
+                          "fallback handles (docs/RELIABILITY.md)")
+    pol.add_argument("--degraded", action="store_true",
+                     help="serve through damage with per-record fallbacks "
+                          "and print the RestoreReport (default)")
     args = ap.parse_args()
     if args.dense and args.mode not in (None, "dense"):
         ap.error("--dense conflicts with --mode " + args.mode)
@@ -103,6 +152,8 @@ def main():
         ap.error("--ckpt and --save-ckpt are mutually exclusive "
                  "(restored weights are already checkpointed)")
     mode = "dense" if args.dense else (args.mode or "fused")
+    policy = "strict" if args.strict else "degraded"
+    HEALTH.state, HEALTH.detail = "initializing", ""
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = dataclasses.replace(cfg, scan_layers=True)
@@ -113,7 +164,29 @@ def main():
     codec = Codec(encode_backend=args.codec_backend,
                   decode_backend=args.codec_backend)
     if args.ckpt:
-        params = _restore_params(args, model, mode, codec)
+        from repro.checkpoint.ckpt import CheckpointError
+        HEALTH.state = "restoring"
+        try:
+            params, report = _restore_params(args, model, mode, codec,
+                                             policy)
+        except (CheckpointError, FileNotFoundError) as e:
+            HEALTH.state, HEALTH.detail = "failed", str(e)
+            print(f"[launch.serve] restore FAILED: {e}")
+            raise SystemExit(1)
+        if report is not None and report.degraded:
+            print("[launch.serve]", report.summary())
+            if policy == "strict":
+                HEALTH.state = "failed"
+                HEALTH.detail = (f"{len(report.quarantined)} quarantined "
+                                 f"record(s) under --strict")
+                print(f"[launch.serve] --strict: refusing to serve with "
+                      f"{len(report.quarantined)} quarantined record(s); "
+                      f"exiting nonzero")
+                raise SystemExit(1)
+            HEALTH.state = "degraded"
+            HEALTH.detail = f"{len(report.quarantined)} record(s) on fallback"
+        else:
+            HEALTH.state = "ready"
     else:
         params = model.init(jax.random.key(0))
         params = assign_weight_modes(params, mode=mode,
@@ -133,6 +206,9 @@ def main():
             mgr.save(0, {"params": params}, blocking=True)
             print(f"[launch.serve] saved serving checkpoint to "
                   f"{args.save_ckpt} in {time.perf_counter() - t0:.2f}s")
+        HEALTH.state = "ready"
+    print(f"[launch.serve] health={HEALTH.state} ready={HEALTH.ready()} "
+          f"policy={policy} mode_mix={mode_mix(params)}")
     print(f"[launch.serve] mode={mode}:", stream_stats(params))
 
     max_len = args.prompt_len + args.tokens

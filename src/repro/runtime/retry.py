@@ -1,0 +1,85 @@
+"""Retry/backoff-with-jitter policy for checkpoint I/O.
+
+One :class:`RetryPolicy` instance rides on each ``CheckpointManager``: the
+writer pool's pack writes and every pack/manifest read funnel through
+``call()``, so a transient filesystem error (or an injected one —
+runtime/faults.py raises ``OSError`` subclasses on purpose) is absorbed by
+exponential backoff instead of killing the save/restore.  The policy is
+deterministic: jitter draws from a ``random.Random(seed)`` owned by the
+instance, and the attempt counters (``stats()``) are exact — restore code
+surfaces them next to the codec cache stats (``RestoreReport.retry``,
+``launch/serve.py``) so "the retry layer saved this restore" is observable,
+not folklore.
+
+Only ``OSError``-class failures retry by default.  Validation failures
+(frame CRC, WireError) are NOT retried — re-reading deterministic corrupt
+bytes cannot heal them; they go to quarantine/fallback instead
+(docs/RELIABILITY.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Callable, Tuple, Type
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Exponential backoff with deterministic jitter.
+
+    ``max_attempts`` counts the first try: the default absorbs up to three
+    consecutive transient failures.  ``base_delay_s`` doubles per retry up
+    to ``max_delay_s``; each sleep is scaled by ``1 + jitter * U[0, 1)``
+    drawn from the instance's seeded RNG (desynchronizes a fleet retrying
+    against one storage system without losing reproducibility).
+    """
+    max_attempts: int = 4
+    base_delay_s: float = 0.002
+    max_delay_s: float = 0.25
+    jitter: float = 0.5
+    seed: int = 0
+    retry_on: Tuple[Type[BaseException], ...] = (OSError,)
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, "
+                             f"got {self.max_attempts}")
+        self._rng = random.Random(self.seed)
+        self._stats = {"calls": 0, "attempts": 0, "retries": 0,
+                       "gave_up": 0}
+
+    def backoff_s(self, attempt: int) -> float:
+        """Sleep before retrying after failed attempt ``attempt``
+        (1-based): exponential in the attempt number, capped, jittered."""
+        base = min(self.base_delay_s * (2 ** (attempt - 1)),
+                   self.max_delay_s)
+        return base * (1.0 + self.jitter * self._rng.random())
+
+    def call(self, fn: Callable, *, describe: str = "io"):
+        """Run ``fn()`` under this policy.  Exceptions in ``retry_on``
+        retry up to ``max_attempts`` total tries; the final failure (and
+        any non-retryable exception) propagates to the caller, which
+        decides between abort and quarantine."""
+        self._stats["calls"] += 1
+        attempt = 0
+        while True:
+            attempt += 1
+            self._stats["attempts"] += 1
+            try:
+                return fn()
+            except self.retry_on:
+                if attempt >= self.max_attempts:
+                    self._stats["gave_up"] += 1
+                    raise
+                self._stats["retries"] += 1
+                time.sleep(self.backoff_s(attempt))
+
+    def stats(self) -> dict:
+        """Exact counters: calls entered, attempts made, retries slept
+        through, and calls that exhausted every attempt."""
+        return dict(self._stats)
+
+    def reset_stats(self) -> None:
+        for k in self._stats:
+            self._stats[k] = 0

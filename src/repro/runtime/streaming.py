@@ -40,8 +40,8 @@ from repro.core.api import (SUPPORTED_FLOAT_DTYPES, CompressedTensor,
 from repro.core.codec_api import current_codec
 from repro.core.params import EnecParams
 from repro.runtime.weights import (DenseWeight, FusedWeight,  # noqa: F401
-                                   StreamedWeight, WeightHandle, is_handle,
-                                   materialize_full_many, resolve)
+                                   StreamedWeight, WeightHandle, handle_kind,
+                                   is_handle, materialize_full_many, resolve)
 
 MIN_STREAM_BYTES = 1 << 20  # 1 MiB
 STREAM_SHARDS = 16          # production TP width (divisors also work)
@@ -347,6 +347,21 @@ def abstract_streamed_params(cfg, p: EnecParams, *,
                                   layer_shape=tuple(layer_shape),
                                   dtype_str=str(jnp.dtype(leaf.dtype))))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def mode_mix(tree) -> dict:
+    """Handle-kind census of a weight tree (``runtime.weights.handle_kind``
+    per leaf).  A clean restore shows one compressed kind plus raw
+    smalls; a DEGRADED restore shows up here as a mixed tree — leaves
+    adopted from a prior step's different layout, or dense fallbacks for
+    quarantined bundles.  Logits are unaffected (every kind executes the
+    canonical contraction); the mix is the observable of how far the tree
+    is from its requested mode."""
+    mix: dict = {}
+    for leaf in jax.tree.leaves(tree, is_leaf=is_handle):
+        k = handle_kind(leaf)
+        mix[k] = mix.get(k, 0) + 1
+    return mix
 
 
 def stream_stats(tree) -> dict:

@@ -123,6 +123,22 @@ def is_handle(x) -> bool:
     return isinstance(x, WeightHandle)
 
 
+def handle_kind(leaf) -> str:
+    """Weight-execution kind of a tree leaf: "dense"/"stream"/"fused" for
+    handles, "raw" for plain arrays — the shared vocabulary the restore
+    report and the serve health line use to describe a (possibly mixed)
+    degraded tree.  All kinds produce bit-identical logits (module
+    docstring), so a mixed kind census is a capacity/latency statement,
+    never a correctness one."""
+    if isinstance(leaf, DenseWeight):
+        return "dense"
+    if isinstance(leaf, StreamedWeight):
+        return "stream"
+    if isinstance(leaf, FusedWeight):
+        return "fused"
+    return "raw"
+
+
 # ---------------------------------------------------------------------------
 # checkpoint (de)serialization: spec <-> handle
 # ---------------------------------------------------------------------------

@@ -1,0 +1,97 @@
+"""Elastic mesh selection (runtime/elastic.py): grid factorization over
+awkward survivor counts, model-axis divisibility against the arch's
+TP-sharded dims, and the single-device floor."""
+import dataclasses
+
+import pytest
+
+import repro.runtime.elastic as elastic
+from repro.runtime.elastic import best_mesh_for, candidate_grids
+
+
+def test_candidate_grids_power_of_two():
+    assert candidate_grids(16) == [(1, 16), (2, 8), (4, 4), (8, 2), (16, 1)]
+
+
+def test_candidate_grids_non_power_of_two_counts():
+    # survivor counts after a node loss are rarely powers of two: only the
+    # model widths that still divide the count may appear
+    assert candidate_grids(12) == [(3, 4), (6, 2), (12, 1)]
+    assert candidate_grids(6) == [(3, 2), (6, 1)]
+    assert candidate_grids(7) == [(7, 1)]       # prime: data-parallel only
+    assert candidate_grids(10) == [(5, 2), (10, 1)]
+
+
+def test_candidate_grids_max_model_caps_width():
+    assert candidate_grids(32, max_model=4) == [(8, 4), (16, 2), (32, 1)]
+    assert candidate_grids(8, max_model=1) == [(8, 1)]
+
+
+def test_candidate_grids_single_device_floor():
+    assert candidate_grids(1) == [(1, 1)]
+
+
+@dataclasses.dataclass
+class _Cfg:
+    """Just the fields best_mesh_for consults (duck-typed like configs)."""
+    n_heads: int
+    head_dim: int
+    d_ff: int
+    n_experts: int = 0
+
+    def head_dim_(self):
+        return self.head_dim
+
+
+@pytest.fixture
+def captured_mesh(monkeypatch):
+    """best_mesh_for builds a real jax mesh; capture the (shape, axes)
+    request instead so the selection logic is testable on any host."""
+    monkeypatch.setattr(elastic, "make_mesh",
+                        lambda shape, axes: (tuple(shape), tuple(axes)))
+
+
+def test_best_mesh_takes_widest_divisible_model_axis(captured_mesh):
+    cfg = _Cfg(n_heads=8, head_dim=8, d_ff=256)
+    assert best_mesh_for(cfg, n_devices=8) == ((1, 8), ("data", "model"))
+
+
+def test_best_mesh_ffn_indivisibility_narrows_model_axis(captured_mesh):
+    # d_ff=4 rejects model=8; model=4 divides heads (64) and ffn (4)
+    cfg = _Cfg(n_heads=8, head_dim=8, d_ff=4)
+    assert best_mesh_for(cfg, n_devices=8) == ((2, 4), ("data", "model"))
+
+
+def test_best_mesh_head_indivisibility_narrows_model_axis(captured_mesh):
+    # hd_total=6 rejects model 8 and 4; model=2 divides 6 and d_ff
+    cfg = _Cfg(n_heads=3, head_dim=2, d_ff=64)
+    assert best_mesh_for(cfg, n_devices=8) == ((4, 2), ("data", "model"))
+
+
+def test_best_mesh_degenerates_to_model_1(captured_mesh):
+    # odd hd_total and d_ff: nothing >1 divides, model=1 always does
+    cfg = _Cfg(n_heads=3, head_dim=1, d_ff=3)
+    assert best_mesh_for(cfg, n_devices=8) == ((8, 1), ("data", "model"))
+
+
+def test_best_mesh_expert_count_constrains_model_axis(captured_mesh):
+    cfg = _Cfg(n_heads=8, head_dim=8, d_ff=256, n_experts=2)
+    assert best_mesh_for(cfg, n_devices=8) == ((4, 2), ("data", "model"))
+
+
+def test_best_mesh_non_power_of_two_devices(captured_mesh):
+    cfg = _Cfg(n_heads=4, head_dim=4, d_ff=32)
+    assert best_mesh_for(cfg, n_devices=6) == ((3, 2), ("data", "model"))
+    assert best_mesh_for(cfg, n_devices=7) == ((7, 1), ("data", "model"))
+
+
+def test_best_mesh_single_device_floor(captured_mesh):
+    cfg = _Cfg(n_heads=8, head_dim=8, d_ff=256)
+    assert best_mesh_for(cfg, n_devices=1) == ((1, 1), ("data", "model"))
+
+
+def test_best_mesh_uses_real_devices_by_default():
+    # no n_devices: the live jax device count (1 on the CPU test host)
+    cfg = _Cfg(n_heads=8, head_dim=8, d_ff=256)
+    mesh = best_mesh_for(cfg)
+    assert mesh.devices.size == 1

@@ -1,0 +1,406 @@
+"""Fault injection, retry/backoff, record quarantine, and degraded-mode
+restore (ISSUE 6): transient I/O faults absorbed with exact attempt
+counters, corrupt records quarantined with per-record prior-step fallback,
+decode-dispatch failures degraded, manifest/LATEST damage survived, and the
+uncorrupted path bit-identical with unchanged dispatch counts."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointError, CheckpointManager
+from repro.core import Codec
+from repro.runtime import faults as rt_faults
+from repro.runtime.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.runtime.retry import RetryPolicy
+from conftest import make_realistic_bf16
+
+
+def _tree(seed=0):
+    return {
+        "params": {"w": make_realistic_bf16(120_000, seed=seed),
+                   "b": jnp.zeros((64,), jnp.bfloat16)},
+        "opt": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def _assert_trees_equal(a, b):
+    for (pa, la), (pb, lb) in zip(
+            jax.tree_util.tree_flatten_with_path(a)[0],
+            jax.tree_util.tree_flatten_with_path(b)[0]):
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert la.dtype == lb.dtype and la.shape == lb.shape, pa
+        np.testing.assert_array_equal(
+            la.reshape(-1).view(np.uint8), lb.reshape(-1).view(np.uint8),
+            err_msg=str(pa))
+
+
+# ---------------------------------------------------------------------------
+# the harness itself: specs, counters, determinism, env hook
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="explode")
+    with pytest.raises(ValueError, match="mode"):
+        FaultSpec(kind="corrupt", mode="scramble")
+
+
+def test_injector_times_bounds_firings():
+    inj = FaultInjector([FaultSpec(kind="read", match="pack", times=2)])
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            inj.check_read("/x/pack-00000.bin")
+    inj.check_read("/x/pack-00000.bin")      # exhausted: no longer fires
+    inj.check_read("/x/manifest.json")       # never matched
+    assert inj.stats()[0]["fired"] == 2
+
+
+def test_injector_corruption_is_seeded_and_deterministic():
+    data = bytes(range(256))
+    a = FaultInjector([FaultSpec(kind="corrupt")], seed=7)
+    b = FaultInjector([FaultSpec(kind="corrupt")], seed=7)
+    assert a.corrupt("f", data) == b.corrupt("f", data) != data
+    # explicit offset: exactly that byte, exactly that xor
+    c = FaultInjector([FaultSpec(kind="corrupt", offset=3, xor=0x10)])
+    out = c.corrupt("f", data)
+    assert out[3] == data[3] ^ 0x10 and out[:3] == data[:3]
+    # truncate keeps the requested prefix
+    t = FaultInjector([FaultSpec(kind="corrupt", mode="truncate", offset=5)])
+    assert t.corrupt("f", data) == data[:5]
+
+
+def test_inject_contextmanager_scopes_activation():
+    assert rt_faults.active() is None
+    with rt_faults.inject(FaultSpec(kind="read", times=1)) as inj:
+        assert rt_faults.active() is inj
+        with pytest.raises(InjectedFault):
+            rt_faults.read_file(__file__)
+        rt_faults.read_file(__file__)      # transient: second read is clean
+    assert rt_faults.active() is None
+
+
+def test_env_hook_parses_enec_faults(monkeypatch):
+    monkeypatch.setenv("ENEC_FAULTS", json.dumps(
+        {"seed": 3, "specs": [{"kind": "write", "match": "pack", "times": 1}]}))
+    inj = rt_faults.active()
+    assert inj is not None and inj.seed == 3
+    with pytest.raises(InjectedFault):
+        inj.check_write("pack-00000.bin")
+    monkeypatch.delenv("ENEC_FAULTS")
+    assert rt_faults.active() is None
+
+
+def test_retry_policy_absorbs_transient_and_counts():
+    pol = RetryPolicy(base_delay_s=0.0001, max_delay_s=0.001, seed=1)
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] <= 2:
+            raise OSError("transient")
+        return "ok"
+
+    assert pol.call(flaky) == "ok"
+    st = pol.stats()
+    assert st == {"calls": 1, "attempts": 3, "retries": 2, "gave_up": 0}
+
+
+def test_retry_policy_gives_up_on_permanent():
+    pol = RetryPolicy(max_attempts=3, base_delay_s=0.0001)
+
+    def dead():
+        raise OSError("permanent")
+
+    with pytest.raises(OSError, match="permanent"):
+        pol.call(dead)
+    st = pol.stats()
+    assert st["attempts"] == 3 and st["gave_up"] == 1
+    # non-retryable exceptions propagate on the first attempt
+    with pytest.raises(ValueError):
+        pol.call(lambda: (_ for _ in ()).throw(ValueError("not io")))
+    assert pol.stats()["attempts"] == 4
+
+
+def test_backoff_grows_and_is_jittered_deterministically():
+    a = RetryPolicy(seed=5)
+    b = RetryPolicy(seed=5)
+    da = [a.backoff_s(i) for i in (1, 2, 3)]
+    assert [a_i for a_i in da] == [b.backoff_s(i) for i in (1, 2, 3)]
+    assert da[0] < da[1] < da[2] <= a.max_delay_s * (1 + a.jitter)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restore under faults
+# ---------------------------------------------------------------------------
+
+def test_transient_read_faults_absorbed_by_retry(tmp_path):
+    """fail-twice-then-succeed reads must be invisible to a STRICT load,
+    with the retry counters proving the policy did the work."""
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(1)
+    mgr.save(1, tree, blocking=True)
+    mgr.retry.reset_stats()
+    with rt_faults.inject(FaultSpec(kind="read", match="pack-", times=2)):
+        out, _ = mgr.load(tree)
+    _assert_trees_equal(tree, out)
+    st = mgr.retry.stats()
+    assert st["retries"] == 2 and st["gave_up"] == 0, st
+    report = mgr.last_restore_report
+    assert not report.degraded and report.retry["retries"] == 2
+
+
+def test_permanent_read_fault_exhausts_retries_strict(tmp_path):
+    mgr = CheckpointManager(tmp_path,
+                            retry=RetryPolicy(base_delay_s=0.0001))
+    tree = _tree(2)
+    mgr.save(1, tree, blocking=True)
+    with rt_faults.inject(FaultSpec(kind="read", match="pack-")):
+        with pytest.raises(CheckpointError, match="injected read fault"):
+            mgr.load(tree)
+    assert mgr.retry.stats()["gave_up"] >= 1
+
+
+def test_transient_write_faults_absorbed_on_save(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(3)
+    mgr.retry.reset_stats()
+    with rt_faults.inject(FaultSpec(kind="write", match="pack-", times=2)):
+        mgr.save(1, tree, blocking=True)
+    assert mgr.retry.stats()["retries"] == 2
+    out, _ = mgr.load(tree)
+    _assert_trees_equal(tree, out)
+
+
+def test_corrupt_record_quarantined_with_prior_step_fallback(tmp_path):
+    """One flipped byte in a committed record: degraded load restores the
+    record from the previous step, bit-exactly, and the report names the
+    damage; strict load still refuses."""
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(4)
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, tree, blocking=True)
+    name, pack, pos = rt_faults.flip_pack_byte(tmp_path, "params/w", step=2)
+    assert name == "params/w" and pos > 0
+    with pytest.raises(CheckpointError, match="CRC"):
+        mgr.load(tree)
+    out, man = mgr.load(tree, policy="degraded")
+    assert man["step"] == 2
+    _assert_trees_equal(tree, out)
+    report = mgr.last_restore_report
+    assert [q.name for q in report.quarantined] == ["params/w"]
+    q = report.quarantined[0]
+    assert "CRC" in q.cause and q.offset >= 0 and "pack-" in q.pack
+    assert q.fallback.startswith("step 1")
+    assert "params/w" in report.summary()
+
+
+def test_quarantined_record_without_source_raises(tmp_path):
+    """Degraded mode trades freshness, never correctness: a record with no
+    intact copy anywhere must still fail, listing the quarantine."""
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(5)
+    mgr.save(1, tree, blocking=True)
+    rt_faults.flip_pack_byte(tmp_path, "params/w", step=1)
+    with pytest.raises(CheckpointError, match="no intact source"):
+        mgr.load(tree, policy="degraded")
+
+
+def test_decode_fault_degrades_to_prior_step(tmp_path):
+    """An injected decode-dispatch failure (bytes intact, decode dies) is
+    quarantined and the record restored through the fallback; strict mode
+    surfaces it as CheckpointError."""
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(6)
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, tree, blocking=True)
+    with rt_faults.inject(FaultSpec(kind="decode", match="params/w",
+                                    times=1)):
+        with pytest.raises(CheckpointError, match="decode failed"):
+            mgr.load(tree)
+    with rt_faults.inject(FaultSpec(kind="decode", match="params/w",
+                                    times=1)) as inj:
+        out, _ = mgr.load(tree, policy="degraded")
+    _assert_trees_equal(tree, out)
+    report = mgr.last_restore_report
+    assert [q.name for q in report.quarantined] == ["params/w"]
+    assert "decode failed" in report.quarantined[0].cause
+    assert report.quarantined[0].fallback.startswith("step 1")
+    assert inj.stats()[0]["fired"] == 1
+
+
+def test_uncorrupted_degraded_restore_identical_to_strict(tmp_path):
+    """Acceptance: with nothing injected, policy="degraded" must be
+    byte-for-byte the strict path — same values, same decode dispatch
+    count, empty quarantine."""
+    codec = Codec()
+    mgr = CheckpointManager(tmp_path, codec=codec)
+    tree = _tree(7)
+    mgr.save(1, tree, blocking=True)
+    codec.reset_decode_cache_stats()
+    strict_out, _ = mgr.load(tree)
+    strict_dispatches = codec.decode_cache_stats()["dispatches"]
+    strict_buckets = len(mgr.last_decode_plan.buckets)
+    codec.reset_decode_cache_stats()
+    degraded_out, _ = mgr.load(tree, policy="degraded")
+    st = codec.decode_cache_stats()
+    assert st["dispatches"] == strict_dispatches == strict_buckets
+    assert len(mgr.last_decode_plan.buckets) == strict_buckets
+    assert not mgr.last_restore_report.degraded
+    _assert_trees_equal(strict_out, degraded_out)
+
+
+def test_unknown_restore_policy_rejected(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree(8), blocking=True)
+    with pytest.raises(ValueError, match="restore policy"):
+        mgr.load(_tree(8), policy="yolo")
+
+
+# ---------------------------------------------------------------------------
+# manifest / LATEST damage, GC parse-safety (satellite)
+# ---------------------------------------------------------------------------
+
+def test_garbage_latest_falls_back_to_newest_intact_step(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(9)
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, tree, blocking=True)
+    (tmp_path / "LATEST").write_text("not_a_step_pointer!!")
+    assert mgr.latest_step() is None
+    out, man = mgr.load(tree)
+    assert man["step"] == 2
+    _assert_trees_equal(tree, out)
+
+
+def test_dangling_latest_falls_back(tmp_path):
+    import shutil
+
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(10)
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, tree, blocking=True)
+    shutil.rmtree(tmp_path / "step_000000000002")   # LATEST now dangles
+    out, man = mgr.load(tree)
+    assert man["step"] == 1
+    _assert_trees_equal(tree, out)
+
+
+def test_corrupt_manifest_falls_back_to_earlier_step(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(11)
+    mgr.save(1, tree, blocking=True)
+    mgr.save(2, tree, blocking=True)
+    mpath = tmp_path / "step_000000000002" / "manifest.json"
+    mpath.write_text(mpath.read_text()[:37])
+    out, man = mgr.load(tree)
+    assert man["step"] == 1
+    _assert_trees_equal(tree, out)
+    # an EXPLICIT step request keeps the hard failure
+    with pytest.raises(CheckpointError, match="corrupt"):
+        mgr.load(tree, step=2)
+
+
+def test_gc_never_deletes_unparseable_steps(tmp_path):
+    """Retention must only count (and delete) steps it can actually parse —
+    a corrupt-manifest step might hold the only intact copy of a record."""
+    mgr = CheckpointManager(tmp_path, keep_last=1)
+    tree = _tree(12)
+    mgr.save(1, tree, blocking=True)
+    mpath = tmp_path / "step_000000000001" / "manifest.json"
+    mpath.write_text("{corrupt")
+    mgr.save(2, tree, blocking=True)
+    mgr.save(3, tree, blocking=True)   # GC: step 2 goes, step 1 must stay
+    kept = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert kept == ["step_000000000001", "step_000000000003"], kept
+
+
+# ---------------------------------------------------------------------------
+# degraded SERVING restore (ISSUE 6 acceptance)
+# ---------------------------------------------------------------------------
+
+def _smoke_model():
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(get_smoke_config("llama3_2_1b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def _serve(cfg, model, tree):
+    pb = {"tokens": jax.random.randint(jax.random.key(1), (2, 8), 0,
+                                       cfg.vocab_size)}
+    logits, cache = model.prefill_fn(tree, pb, 16)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    dec, _ = model.decode_fn(tree, cache, tok)
+    return np.asarray(logits), np.asarray(dec)
+
+
+def test_degraded_serving_restore_mixed_mode_bit_identical(tmp_path):
+    """The tentpole acceptance: corrupt ONE serving-layout record; the
+    degraded load_for_serving quarantines exactly it, adopts the previous
+    step's STREAM bundle for it (the damaged fused record degrades to a
+    different execution mode), the rest of the tree restores batched as
+    before, and the logits stay bit-identical to the undamaged tree."""
+    from repro.runtime.streaming import assign_weight_modes
+    from repro.runtime.weights import StreamedWeight, is_handle
+
+    cfg, model, params = _smoke_model()
+    # step 1: stream layout (the redundancy level the fallback adopts);
+    # step 2: fused layout (what serving wants)
+    mgr_old = CheckpointManager(tmp_path, serving_layout="stream",
+                                serving_min_bytes=1024, serving_shards=1)
+    mgr_old.save(1, {"params": params}, blocking=True)
+    mgr = CheckpointManager(tmp_path, serving_layout="fused",
+                            serving_min_bytes=1024)
+    mgr.save(2, {"params": params}, blocking=True)
+    man = mgr.manifest()
+    victim = next(e["name"] for e in man["leaves"]
+                  if (e.get("handle") or {}).get("kind") == "fused")
+    rt_faults.flip_pack_byte(tmp_path, victim, step=2)
+
+    with pytest.raises(CheckpointError, match="CRC"):
+        mgr.load_for_serving(params, mode="fused", prefix="params",
+                             min_bytes=1024)
+    tree, _ = mgr.load_for_serving(params, mode="fused", prefix="params",
+                                   min_bytes=1024, policy="degraded")
+    report = mgr.last_restore_report
+    assert [q.name for q in report.quarantined] == [victim]
+    assert report.quarantined[0].fallback.startswith("step 1")
+    # the quarantined fused record now executes as an adopted stream handle
+    handles = [l for l in jax.tree_util.tree_leaves(tree, is_leaf=is_handle)
+               if isinstance(l, StreamedWeight)]
+    assert handles, "fallback did not adopt the stream bundle"
+    ref = _serve(cfg, model, assign_weight_modes(params, mode="fused",
+                                                 min_bytes=1024))
+    got = _serve(cfg, model, tree)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a.view(np.uint32), b.view(np.uint32))
+
+
+def test_degraded_serving_report_counts_single_quarantine(tmp_path):
+    """CI's fault-smoke contract in-process: same-layout two-step history,
+    one byte flipped at the newest step -> exactly one quarantined record,
+    fallback adopted from the prior step, serving-capable tree."""
+    cfg, model, params = _smoke_model()
+    mgr = CheckpointManager(tmp_path, serving_layout="fused",
+                            serving_min_bytes=1024)
+    mgr.save(1, {"params": params}, blocking=True)
+    mgr.save(2, {"params": params}, blocking=True)
+    man = mgr.manifest()
+    victim = next(e["name"] for e in man["leaves"] if e.get("stack"))
+    rt_faults.flip_pack_byte(tmp_path, victim, step=2)
+    like = jax.eval_shape(model.init, jax.random.key(0))
+    tree, _ = mgr.load_for_serving(like, mode="fused", prefix="params",
+                                   min_bytes=1024, policy="degraded")
+    report = mgr.last_restore_report
+    assert len(report.quarantined) == 1
+    assert report.quarantined[0].name == victim
+    assert report.quarantined[0].fallback.startswith("step 1")
+    _serve(cfg, model, tree)   # the degraded tree actually serves
