@@ -20,6 +20,8 @@ Modules:
                                 per-layer vs stacked)
   bench_e2e         Fig. 10    (TTFT/TPOT dense vs ENEC-streamed + derived)
   bench_serve       ISSUE 2    (TTFT/TPOT/tok-s across weight-execution modes)
+  bench_overlap     ISSUE 7    (decode-prefetch pipeline: decode_ms vs
+                                matmul_ms, overlapped vs serial TPOT)
   bench_ckpt        ISSUE 3/4  (enec-v2 save/load + restore wall clock +
                                 decode dispatch accounting)
   bench_faults      ISSUE 6    (restore latency under injected fault rates:
@@ -38,7 +40,16 @@ from pathlib import Path
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
 SUITE_ORDER = ["ratio", "throughput", "blocksize", "ablation", "params",
-               "transfer", "pipeline", "e2e", "serve", "ckpt", "faults"]
+               "transfer", "pipeline", "e2e", "serve", "overlap", "ckpt",
+               "faults"]
+
+
+def _env_flag(name: str) -> bool:
+    """A truthy env flag: unset, "", "0", "false", "no", "off" are all
+    False.  (``bool(os.environ.get(...))`` counted ``BENCH_SMOKE=0`` as
+    smoke, so full-config runs got recorded as smoke artifacts.)"""
+    return os.environ.get(name, "").strip().lower() \
+        not in ("", "0", "false", "no", "off")
 
 
 def _suite_name(mod_name: str) -> str:
@@ -58,7 +69,7 @@ def write_suite_json(suite: str, rows, error: str = None,
             "jax_backend": jax.default_backend(),
             "jax_version": jax.__version__,
             "python": sys.version.split()[0],
-            "smoke": bool(os.environ.get("BENCH_SMOKE")),
+            "smoke": _env_flag("BENCH_SMOKE"),
         },
         "results": [{"name": name, "us_per_call": round(us, 1),
                      "derived": derived} for name, us, derived in rows],
@@ -88,13 +99,13 @@ def main(argv=None) -> None:
         os.environ["BENCH_SMOKE"] = "1"
 
     from . import (bench_ablation, bench_blocksize, bench_ckpt, bench_e2e,
-                   bench_faults, bench_params, bench_pipeline, bench_ratio,
-                   bench_serve, bench_throughput, bench_transfer)
+                   bench_faults, bench_overlap, bench_params, bench_pipeline,
+                   bench_ratio, bench_serve, bench_throughput, bench_transfer)
     by_suite = {_suite_name(m.__name__): m for m in
                 [bench_ratio, bench_throughput, bench_blocksize,
                  bench_ablation, bench_params, bench_transfer,
-                 bench_pipeline, bench_e2e, bench_serve, bench_ckpt,
-                 bench_faults]}
+                 bench_pipeline, bench_e2e, bench_serve, bench_overlap,
+                 bench_ckpt, bench_faults]}
     wanted = [s.removeprefix("bench_") for s in args.suites] or SUITE_ORDER
     unknown = [s for s in wanted if s not in by_suite]
     if unknown:
@@ -105,9 +116,11 @@ def main(argv=None) -> None:
     failed = 0
     for suite in wanted:
         mod = by_suite[suite]
-        try:
-            rows = list(mod.run())
-            for name, us, derived in rows:
+        rows = []   # accumulated incrementally so a mid-suite failure still
+        try:        # records every completed benchmark, not an empty file
+            for row in mod.run():
+                rows.append(row)
+                name, us, derived = row
                 print(f"{name},{us:.1f},{derived}")
             write_suite_json(suite, rows, out_dir=Path(args.out_dir))
         except Exception as e:  # noqa: BLE001
@@ -115,7 +128,7 @@ def main(argv=None) -> None:
             print(f"{mod.__name__},ERROR,{type(e).__name__}: {e}",
                   file=sys.stderr)
             traceback.print_exc()
-            write_suite_json(suite, [], error=f"{type(e).__name__}: {e}",
+            write_suite_json(suite, rows, error=f"{type(e).__name__}: {e}",
                              out_dir=Path(args.out_dir))
     if failed:
         raise SystemExit(1)

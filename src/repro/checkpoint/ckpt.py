@@ -955,9 +955,15 @@ class CheckpointManager:
                     and mode != "dense" \
                     and self._spec_serves_mode(spec, mode,
                                                degraded=is_fallback):
-                leaf_shape = (int(e["stack"]),) + (
-                    tuple(spec["layer_shape"]) if spec["kind"] == "stream"
-                    else (int(spec["k"]), int(spec["n"])))
+                if spec["kind"] == "stream":
+                    # flat records are L=1 stacks of plain 2-D leaves:
+                    # layer_shape IS the leaf shape (no stack prefix)
+                    leaf_shape = tuple(spec["layer_shape"]) \
+                        if spec.get("flat") \
+                        else (int(e["stack"]),) + tuple(spec["layer_shape"])
+                else:
+                    leaf_shape = (int(e["stack"]),
+                                  int(spec["k"]), int(spec["n"]))
                 self._check_leaf(name, leaf_shape, like,
                                  dtype=spec["dtype"])
                 ct = self._record_ct(e, payload, packs=man.get("packs"))

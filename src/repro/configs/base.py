@@ -52,6 +52,9 @@ class ArchConfig:
     moe_dispatch_a2a: bool = False  # reshard x_ec batch->contract via a2a
     decode_score_shard: bool = False  # flash-decoding: pin scores S-sharded
     attn_chunk: int = 2048          # flash KV chunk (train/prefill)
+    # decode-prefetch pipeline for streamed weights (runtime/overlap.py):
+    # off | on | auto (auto == on whenever streamed leaves are present)
+    overlap: str = "auto"
 
     @property
     def is_encdec(self) -> bool:

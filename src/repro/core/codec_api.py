@@ -187,6 +187,11 @@ class DecodePlan:
     buckets: Tuple[DecodeBucket, ...]
     n_inputs: int
     n_passthrough: int
+    # exact=True skips block-count bucket rounding: each dispatch decodes
+    # its true block count with zero pad waste (the overlap prefetch path,
+    # which decodes the same per-layer leaf set every step, so the compile
+    # cache sees one stable exact count instead of unbounded variety)
+    exact: bool = False
     _treedef: Any = dataclasses.field(repr=False, default=None)
     _groups: list = dataclasses.field(repr=False, default_factory=list)
     _passthrough: dict = dataclasses.field(repr=False, default_factory=dict)
@@ -443,12 +448,14 @@ class Codec:
 
     def _decode_bucketed(self, streams: BlockStreams, fmt: FloatFormat,
                          p: EnecParams, block_elems: int,
-                         b_vec=None, l_vec=None):
+                         b_vec=None, l_vec=None, exact=False):
         """One decode dispatch for flat (B, ...) block streams; mirror of
         :meth:`_encode_bucketed` (per-block ``b_vec`` / ``l_vec`` let
-        tensors with different searched ``(b, l)`` share the dispatch)."""
+        tensors with different searched ``(b, l)`` share the dispatch).
+        ``exact=True`` decodes the true block count without bucket
+        rounding (zero pad waste; see :meth:`plan_decode`)."""
         nblocks = streams.mask.shape[0]
-        bucket = self._block_bucket(nblocks)
+        bucket = nblocks if exact else self._block_bucket(nblocks)
         if self.config.decode_backend != "pallas":
             if b_vec is None:
                 b_vec = jnp.full((nblocks,), p.b, jnp.int32)
@@ -557,13 +564,17 @@ class Codec:
 
     # -- plan_decode ------------------------------------------------------
 
-    def plan_decode(self, tree) -> DecodePlan:
+    def plan_decode(self, tree, *, exact: bool = False) -> DecodePlan:
         """Build the decode schedule for every :class:`CompressedTensor` in
         ``tree`` (any pytree; a plain list of tensors — with ``None`` holes
         — works too).  Tensors sharing a decoder bucket are assigned to one
         :class:`DecodeBucket` == one future jit dispatch; const/raw tensors
         and non-compressed leaves restore without any dispatch
-        (``n_passthrough``)."""
+        (``n_passthrough``).  ``exact=True`` disables block-count bucket
+        rounding — each dispatch decodes its true block count (no pad
+        waste), at the cost of one compiled decoder per distinct count;
+        use it when the same tensor set decodes repeatedly (the overlap
+        scheduler's per-layer prefetch)."""
         leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_ct)
         passthrough: dict = {}   # slot -> "ct" (const/raw) | "identity"
         groups: Dict[tuple, list] = {}
@@ -584,12 +595,14 @@ class Codec:
             nblocks = sum(m["flat"].mask.shape[0] for m in members)
             buckets.append(DecodeBucket(
                 backend=key[0], fmt_name=key[1], params_key=key[2],
-                block_elems=key[3], block_bucket=self._block_bucket(nblocks),
+                block_elems=key[3],
+                block_bucket=nblocks if exact
+                else self._block_bucket(nblocks),
                 nblocks=nblocks, n_tensors=len(members)))
         return DecodePlan(
             config=self.config, buckets=tuple(buckets),
             n_inputs=len(leaves), n_passthrough=len(passthrough),
-            _treedef=treedef, _groups=list(groups.values()),
+            exact=exact, _treedef=treedef, _groups=list(groups.values()),
             _passthrough=passthrough, _leaves=leaves)
 
     # -- execute ----------------------------------------------------------
@@ -718,7 +731,8 @@ class Codec:
                               jnp.int32) for m in members])
             bits = self._decode_bucketed(flat, members[0]["ct"].fmt, p0,
                                          members[0]["ct"].block_elems,
-                                         b_vec=b_vec, l_vec=l_vec)
+                                         b_vec=b_vec, l_vec=l_vec,
+                                         exact=plan.exact)
             offset = 0
             for m in members:
                 nb = m["flat"].mask.shape[0]
@@ -831,13 +845,16 @@ class Codec:
                                      ct.params, ct.block_elems)
         return _stacked_from_bits(ct, n_layers, bits)
 
-    def decompress_stacked_many(self, cts: Sequence[Optional[CompressedTensor]]
+    def decompress_stacked_many(self, cts: Sequence[Optional[CompressedTensor]],
+                                *, exact: bool = False
                                 ) -> List[Optional[Any]]:
         """Decompress many tensors with O(#buckets) decode dispatches:
         :meth:`plan_decode` + :meth:`execute`.  Accepts any mix of per-leaf
         and stacked tensors plus ``const`` / ``raw`` / ``None`` entries;
-        outputs are bit-identical to the per-leaf path."""
-        plan = self.plan_decode(list(cts))
+        outputs are bit-identical to the per-leaf path (``exact`` only
+        drops the pad blocks a bucketed dispatch would decode and slice
+        away — see :meth:`plan_decode`)."""
+        plan = self.plan_decode(list(cts), exact=exact)
         return self.execute(plan)
 
     # -- pytree API -------------------------------------------------------

@@ -123,6 +123,13 @@ def main():
                          "default fused")
     ap.add_argument("--dense", action="store_true",
                     help="deprecated alias for --mode dense")
+    ap.add_argument("--overlap", default="auto",
+                    choices=("off", "on", "auto"),
+                    help="decode-prefetch pipeline for streamed weights "
+                         "(docs/SERVING.md): decode layer l+1 while layer l "
+                         "computes; auto enables it whenever streamed "
+                         "leaves are present; logits are bit-identical "
+                         "either way")
     ap.add_argument("--min-bytes", type=int, default=4096,
                     help="smallest leaf worth compressing")
     ap.add_argument("--shards", type=int, default=2,
@@ -156,7 +163,7 @@ def main():
     HEALTH.state, HEALTH.detail = "initializing", ""
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
-    cfg = dataclasses.replace(cfg, scan_layers=True)
+    cfg = dataclasses.replace(cfg, scan_layers=True, overlap=args.overlap)
     model = build_model(cfg)
     # one explicit Codec instance owns this server's compression state —
     # caches, cache stats, and the h2d transfer counter are all scoped to
@@ -209,7 +216,8 @@ def main():
         HEALTH.state = "ready"
     print(f"[launch.serve] health={HEALTH.state} ready={HEALTH.ready()} "
           f"policy={policy} mode_mix={mode_mix(params)}")
-    print(f"[launch.serve] mode={mode}:", stream_stats(params))
+    print(f"[launch.serve] mode={mode} overlap={args.overlap}:",
+          stream_stats(params))
 
     max_len = args.prompt_len + args.tokens
     prompts = jax.random.randint(jax.random.key(1),

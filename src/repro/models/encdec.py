@@ -13,7 +13,7 @@ from .layers import (ACT_DTYPE, attention_block, attention_decode_block,
                      dense_init, embed_init, embed_tokens, init_attention,
                      init_cross_attention, init_mlp, lm_logits, mlp_block,
                      rms_norm)
-from .lm import attn_shape
+from .lm import _dense_leaf, attn_shape
 
 
 def init_params(key, cfg):
@@ -89,7 +89,7 @@ def encode(params, cfg, frames):
 
 def decode_train(params, cfg, enc_out, tokens):
     """Teacher-forced decoder forward -> logits (B, T, V)."""
-    x = embed_tokens(params["embed"], tokens)
+    x = embed_tokens(_dense_leaf(params["embed"]), tokens)
     positions = jnp.arange(x.shape[1])[None, :]
     s = attn_shape(cfg)
 
@@ -105,7 +105,7 @@ def decode_train(params, cfg, enc_out, tokens):
             memory = cross_memory(sl["xattn"], enc_out, s)
             x, _ = _dec_layer_fwd(sl, cfg, x, memory, positions)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    return lm_logits(x, params["head"])
+    return lm_logits(x, _dense_leaf(params["head"]))
 
 
 def loss_fn(params, cfg, batch):
@@ -140,7 +140,7 @@ def prefill(params, cfg, frames, tokens, max_len: int):
     s = attn_shape(cfg)
     b, t = tokens.shape
     cache = init_cache(cfg, b, max_len, enc_out.shape[1])
-    x = embed_tokens(params["embed"], tokens)
+    x = embed_tokens(_dense_leaf(params["embed"]), tokens)
     positions = jnp.arange(t)[None, :]
     for i in range(cfg.n_layers):
         sl = jax.tree.map(lambda a: a[i], params["dec_stack"])
@@ -152,13 +152,13 @@ def prefill(params, cfg, frames, tokens, max_len: int):
         cache["v"] = cache["v"].at[i, :, :t].set(kv[1])
     cache["lengths"] = jnp.full((b,), t, jnp.int32)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    return lm_logits(x[:, -1:], params["head"])[:, 0], cache
+    return lm_logits(x[:, -1:], _dense_leaf(params["head"]))[:, 0], cache
 
 
 def decode_step(params, cfg, cache, tokens):
     """One decoder token. tokens: (B,)."""
     s = attn_shape(cfg)
-    x = embed_tokens(params["embed"], tokens[:, None])
+    x = embed_tokens(_dense_leaf(params["embed"]), tokens[:, None])
     lengths = cache["lengths"]
 
     def body(x, sl):
@@ -191,4 +191,4 @@ def decode_step(params, cfg, cache, tokens):
         cache = dict(cache, k=jnp.stack(ks), v=jnp.stack(vs),
                      lengths=lengths + 1)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    return lm_logits(x, params["head"])[:, 0], cache
+    return lm_logits(x, _dense_leaf(params["head"]))[:, 0], cache

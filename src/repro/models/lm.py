@@ -25,6 +25,9 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.overlap import (build_schedule, overlap_enabled,
+                                   pipeline_scan, pipeline_unrolled)
+from repro.runtime.weights import is_handle
 from repro.runtime.weights import resolve as resolve_weights
 
 from . import moe as moe_lib
@@ -190,13 +193,28 @@ def _remat_policy(cfg):
     }[cfg.remat_policy]
 
 
+def _dense_leaf(leaf):
+    """Materialize a top-level weight handle (the policy may stream even
+    non-stacked 2-D leaves like ``embed``/``head`` as L=1 stacks); plain
+    arrays pass through."""
+    return leaf.materialize() if is_handle(leaf) else leaf
+
+
+def _wrap_body(cfg, body):
+    return jax.checkpoint(body, prevent_cse=False,
+                          policy=_remat_policy(cfg)) if cfg.remat else body
+
+
 def _run_stack(params, cfg, x, positions, *, prefix_len=0, want_cache=False):
     """Forward through all periods. Returns (x, caches, aux_sum).
 
     Weight-execution handles (runtime/weights.py) in the period stack are
-    resolved per layer slice: storage-only streams materialize here (XLA
-    overlaps layer l+1's decode with layer l's compute under scan), matmul
-    handles pass through to the layers.
+    resolved per layer slice.  When the overlap policy is active
+    (``cfg.overlap`` + streamed leaves present), the loop runs as the
+    double-buffered prefetch pipeline of ``runtime.overlap`` — layer l+1's
+    batched decode is issued before layer l's matmuls; otherwise streams
+    decode serially inside their own layer.  Logits are bit-identical
+    either way (only scheduling moves).
     """
     program = block_program(cfg)
     n_periods = cfg.n_layers // len(program)
@@ -215,6 +233,29 @@ def _run_stack(params, cfg, x, positions, *, prefix_len=0, want_cache=False):
             aux_sum = aux_sum + aux["lb_loss"] + 1e-3 * aux["z_loss"]
         return x, caches, aux_sum
 
+    if overlap_enabled(getattr(cfg, "overlap", "auto"), period):
+        schedule = build_schedule(period, n_periods)
+
+        def apply_fn(carry, sliced, _extra, _i):
+            x, aux_acc = carry
+            x, caches, aux = period_body(x, sliced)
+            out = [c for c in caches if c is not None] if want_cache else None
+            return (x, aux_acc + aux), out
+
+        if cfg.scan_layers:
+            (x, aux_sum), caches = pipeline_scan(
+                schedule, apply_fn, (x, jnp.float32(0)),
+                wrap=partial(_wrap_body, cfg))
+            return x, caches, aux_sum
+        (x, aux_sum), cache_list = pipeline_unrolled(
+            schedule, apply_fn, (x, jnp.float32(0)),
+            wrap=partial(_wrap_body, cfg))
+        if want_cache and cache_list and cache_list[0]:
+            caches = jax.tree.map(lambda *xs: jnp.stack(xs), *cache_list)
+        else:
+            caches = None
+        return x, caches, aux_sum
+
     if cfg.scan_layers:
         def scan_body(carry, sliced):
             x, aux_acc = carry
@@ -222,19 +263,13 @@ def _run_stack(params, cfg, x, positions, *, prefix_len=0, want_cache=False):
             out = [c for c in caches if c is not None] if want_cache else None
             return (x, aux_acc + aux), out
 
-        body = scan_body
-        if cfg.remat:
-            body = jax.checkpoint(scan_body, prevent_cse=False,
-                                  policy=_remat_policy(cfg))
+        body = _wrap_body(cfg, scan_body)
         (x, aux_sum), stacked = jax.lax.scan(body, (x, jnp.float32(0)), period)
         caches = stacked
     else:
         aux_sum = jnp.float32(0)
         cache_list = []
-        body = period_body
-        if cfg.remat:
-            body = jax.checkpoint(period_body, prevent_cse=False,
-                                  policy=_remat_policy(cfg))
+        body = _wrap_body(cfg, period_body)
         for i in range(n_periods):
             sliced = jax.tree.map(lambda a: a[i], period)
             x, caches_i, aux = body(x, sliced)
@@ -250,7 +285,7 @@ def _run_stack(params, cfg, x, positions, *, prefix_len=0, want_cache=False):
 def _assemble_inputs(params, cfg, batch):
     """tokens (+ optional modality prefix embeddings) -> (x, positions,
     prefix_len)."""
-    x = embed_tokens(params["embed"], batch["tokens"])
+    x = embed_tokens(_dense_leaf(params["embed"]), batch["tokens"])
     prefix_len = 0
     if cfg.prefix_embed and "prefix_embeds" in batch:
         pe = batch["prefix_embeds"].astype(ACT_DTYPE)
@@ -265,7 +300,8 @@ def forward(params, cfg, batch, *, want_cache=False):
     x, caches, aux = _run_stack(params, cfg, x, positions,
                                 prefix_len=prefix_len, want_cache=want_cache)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    head = (_dense_leaf(params["embed"]).T if cfg.tie_embeddings
+            else _dense_leaf(params["head"]))
     return x, caches, aux, head, prefix_len
 
 
@@ -339,13 +375,14 @@ def decode_fn(params, cfg, cache, tokens):
     """One decode step. tokens: (B,) int32. Returns (logits (B, V), cache)."""
     program = block_program(cfg)
     n_periods = cfg.n_layers // len(program)
-    x = embed_tokens(params["embed"], tokens[:, None])
+    embed = _dense_leaf(params["embed"])
+    x = embed_tokens(embed, tokens[:, None])
     lengths = cache["lengths"]
     period = params["period"]
     entries = cache["entries"]
     if n_periods == 0:  # 0-layer variant used by the dry-run cost protocol
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        head = embed.T if cfg.tie_embeddings else _dense_leaf(params["head"])
         return lm_logits(x, head)[:, 0], dict(cache, lengths=lengths + 1)
 
     def period_body(x, sliced_params, sliced_cache):
@@ -357,7 +394,21 @@ def decode_fn(params, cfg, cache, tokens):
             new_entries.append(new_c)
         return x, new_entries
 
-    if cfg.scan_layers:
+    if overlap_enabled(getattr(cfg, "overlap", "auto"), period):
+        schedule = build_schedule(period, n_periods)
+
+        def apply_fn(x, sliced, sliced_cache, _i):
+            return period_body(x, sliced, sliced_cache)
+
+        if cfg.scan_layers:
+            x, new_entries = pipeline_scan(schedule, apply_fn, x,
+                                           xs_extra=entries)
+        else:
+            x, outs = pipeline_unrolled(schedule, apply_fn, x,
+                                        xs_extra=entries)
+            new_entries = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        cache = {"entries": new_entries, "lengths": lengths + 1}
+    elif cfg.scan_layers:
         def scan_body(x, sl):
             sp, sc = sl
             x, new_entries = period_body(x, sp, sc)
@@ -375,5 +426,5 @@ def decode_fn(params, cfg, cache, tokens):
         new_entries = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         cache = {"entries": new_entries, "lengths": lengths + 1}
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    head = embed.T if cfg.tie_embeddings else _dense_leaf(params["head"])
     return lm_logits(x, head)[:, 0], cache

@@ -39,6 +39,8 @@ from repro.core.api import (SUPPORTED_FLOAT_DTYPES, CompressedTensor,
                             abstract_compressed, matmul_tiles)
 from repro.core.codec_api import current_codec
 from repro.core.params import EnecParams
+from repro.runtime.overlap import OVERLAP_MODES, \
+    overlap_enabled  # noqa: F401  (policy surface re-export)
 from repro.runtime.weights import (DenseWeight, FusedWeight,  # noqa: F401
                                    StreamedWeight, WeightHandle, handle_kind,
                                    is_handle, materialize_full_many, resolve)
@@ -65,12 +67,18 @@ def stream_eligible(pstr: str, shape, dtype,
                     min_bytes: int = MIN_STREAM_BYTES) -> bool:
     """The ONE streamed-leaf predicate (shared by the concrete policy and
     the abstract dry-run path, which used to carry diverging copies): a
-    leaf is compressible iff it is a stacked (L, ...) float stack big
-    enough to amortize the in-step decode."""
-    stacked = "period" in pstr or "stack" in pstr
+    leaf is compressible iff it is big enough to amortize the in-step
+    decode and is either a stacked (L, ...) float stack or a plain 2-D
+    float weight (``embed`` / ``lm_head``-style — the biggest single
+    tensors in the tree, compressed as L=1 stacks with the same
+    never-worse escape)."""
     nbytes = int(np.prod(shape)) * jnp.dtype(dtype).itemsize
-    return (stacked and nbytes >= min_bytes and len(shape) >= 3
-            and jnp.dtype(dtype) in SUPPORTED_FLOAT_DTYPES)
+    if nbytes < min_bytes or jnp.dtype(dtype) not in SUPPORTED_FLOAT_DTYPES:
+        return False
+    if len(shape) == 2:
+        return True
+    stacked = "period" in pstr or "stack" in pstr
+    return stacked and len(shape) >= 3
 
 
 def _tp_axis_for(path: str, shape) -> int:
@@ -88,7 +96,14 @@ def _tp_axis_for(path: str, shape) -> int:
 
 
 def _is_matmul_pos(pstr: str, ndim: int) -> bool:
-    return pstr.rsplit("/", 1)[-1] in MATMUL_LEAF_NAMES and ndim == 3
+    """Is this leaf executed through the handle-aware canonical matmul
+    (``models.layers.weight_matmul``)?  Name alone is not enough: xLSTM's
+    ``mlstm/wq`` shares the ``wq`` name but is consumed by a plain einsum,
+    so only the attention/MLP subtrees qualify — everything else must
+    materialize before its layer runs."""
+    parts = pstr.split("/")
+    return (parts[-1] in MATMUL_LEAF_NAMES and ndim == 3
+            and len(parts) >= 2 and parts[-2] in ("attn", "mlp"))
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +123,14 @@ def serving_job(pstr: str, leaf, mode: str,
     """
     if not stream_eligible(pstr, leaf.shape, leaf.dtype, min_bytes):
         return None
+    if leaf.ndim == 2:
+        # plain 2-D leaf (embed / lm_head-style): an L=1 stack in the same
+        # moveaxis layout; the flat handle squeezes the stack dim back out
+        tp_axis = _tp_axis_for(pstr, leaf.shape)
+        return dict(kind="stream", leaf=leaf,
+                    arr=jnp.moveaxis(leaf, tp_axis, 0)[None],
+                    tp_axis=tp_axis, layer_shape=leaf.shape,
+                    matmul_pos=False, flat=True)
     matmul_pos = _is_matmul_pos(pstr, leaf.ndim)
     if mode == "fused" and matmul_pos:
         return dict(kind="fused", leaf=leaf, arr=matmul_tiles(leaf),
@@ -140,7 +163,8 @@ def build_serving_handle(job: dict, ct):
         ct=ct, tp_axis=job["tp_axis"],
         layer_shape=tuple(job["layer_shape"]),
         dtype_str=str(leaf.dtype),
-        execution="matmul" if job["matmul_pos"] else "materialize")
+        execution="matmul" if job["matmul_pos"] else "materialize",
+        flat=job.get("flat", False))
 
 
 def assign_weight_modes(params, *, mode: str = "fused",
@@ -248,13 +272,14 @@ def compress_params_for_streaming(params, *,
             f"n_inputs={plan.n_inputs} (expected {len(eligible)}) "
             f"shards={plan.shards} (expected {shards})")
     cts = codec.execute(plan)
-    for (slot, leaf, _, tp_axis), ct in zip(eligible, cts):
+    for (slot, leaf, _, tp_axis, flat2d), ct in zip(eligible, cts):
         if ct is None:
             out[slot] = leaf                            # incompressible/const
             continue
-        out[slot] = StreamedWeight(ct=ct, tp_axis=tp_axis,
-                                   layer_shape=tuple(leaf.shape[1:]),
-                                   dtype_str=str(leaf.dtype))
+        out[slot] = StreamedWeight(
+            ct=ct, tp_axis=tp_axis,
+            layer_shape=tuple(leaf.shape if flat2d else leaf.shape[1:]),
+            dtype_str=str(leaf.dtype), flat=flat2d)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -263,15 +288,20 @@ def _stream_jobs(params, min_bytes):
     :func:`streaming_encode_plan` — the two must see the same leaves."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = [None] * len(flat)
-    eligible = []   # (slot, leaf, perm, tp_axis)
+    eligible = []   # (slot, leaf, perm, tp_axis, flat2d)
     for slot, (path, leaf) in enumerate(flat):
         pstr = _pstr(path)
         if not stream_eligible(pstr, leaf.shape, leaf.dtype, min_bytes):
             out[slot] = leaf
             continue
+        if leaf.ndim == 2:      # embed/head-style leaf as an L=1 stack
+            tp_axis = _tp_axis_for(pstr, leaf.shape)
+            perm = jnp.moveaxis(leaf, tp_axis, 0)[None]
+            eligible.append((slot, leaf, perm, tp_axis, True))
+            continue
         tp_axis = _tp_axis_for(pstr, leaf.shape[1:])
         perm = jnp.moveaxis(leaf, 1 + tp_axis, 1)       # (L, tp_dim, ...)
-        eligible.append((slot, leaf, perm, tp_axis))
+        eligible.append((slot, leaf, perm, tp_axis, False))
     return out, treedef, eligible
 
 
@@ -330,9 +360,10 @@ def abstract_streamed_params(cfg, p: EnecParams, *,
         if not stream_eligible(pstr, leaf.shape, leaf.dtype, min_bytes):
             out.append(leaf)
             continue
-        layer_shape = leaf.shape[1:]
+        flat2d = len(leaf.shape) == 2
+        layer_shape = leaf.shape if flat2d else leaf.shape[1:]
         tp_axis = _tp_axis_for(pstr, layer_shape)
-        n_layers = leaf.shape[0]
+        n_layers = 1 if flat2d else leaf.shape[0]
         perm_shape = (layer_shape[tp_axis],) + tuple(
             d for i, d in enumerate(layer_shape) if i != tp_axis)
         ct1 = abstract_compressed(perm_shape, leaf.dtype, p, shards=shards)
@@ -345,7 +376,8 @@ def abstract_streamed_params(cfg, p: EnecParams, *,
             block_elems=ct1.block_elems, shards=ct1.shards, mode="enec")
         out.append(StreamedWeight(ct=ct, tp_axis=tp_axis,
                                   layer_shape=tuple(layer_shape),
-                                  dtype_str=str(jnp.dtype(leaf.dtype))))
+                                  dtype_str=str(jnp.dtype(leaf.dtype)),
+                                  flat=flat2d))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -365,12 +397,23 @@ def mode_mix(tree) -> dict:
 
 
 def stream_stats(tree) -> dict:
-    """Bytes + handle-count accounting over a weight-execution tree."""
+    """Bytes + handle-count accounting over a weight-execution tree.
+
+    ``overlap_eligible_tensors`` counts the streamed leaves the decode-
+    prefetch pipeline (``runtime.overlap``) can schedule ahead of compute;
+    ``flat_stream_tensors`` is the subset stored as L=1 stacks of plain 2-D
+    leaves (embed / lm_head), which sit outside the layer loop and decode
+    once per step rather than once per layer."""
     total_raw = total_dev = 0
-    counts = {"streamed_tensors": 0, "fused_tensors": 0, "dense_handles": 0}
+    counts = {"streamed_tensors": 0, "fused_tensors": 0, "dense_handles": 0,
+              "flat_stream_tensors": 0, "overlap_eligible_tensors": 0}
     for leaf in jax.tree.leaves(tree, is_leaf=is_handle):
         if isinstance(leaf, StreamedWeight):
             counts["streamed_tensors"] += 1
+            if leaf.flat:
+                counts["flat_stream_tensors"] += 1
+            else:
+                counts["overlap_eligible_tensors"] += 1
             n_layers = leaf.ct.streams.mask.shape[0]
             per_layer_raw = int(np.prod(leaf.layer_shape)) \
                 * jnp.dtype(leaf.dtype_str).itemsize

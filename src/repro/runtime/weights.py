@@ -79,6 +79,13 @@ class StreamedWeight(WeightHandle):
     MoE experts / SSM params) are decompressed to dense arrays before the
     layer runs; "matmul" leaves pass through to the layers and execute the
     canonical tiled contraction on the just-decompressed weight.
+
+    ``flat`` marks a handle built from a NON-stacked 2-D leaf (embed /
+    lm_head-style) stored as an L=1 stack: ``layer_shape`` is the full leaf
+    shape, the stream layout keeps the leading (1,) stack dim (so wire
+    records and ``stream_stats`` see one invariant layout), and
+    materialization squeezes it back out.  Flat handles are never sliced by
+    the layer loop.
     """
     ct: CompressedTensor                       # arrays have leading (L,) dim
     tp_axis: int = dataclasses.field(metadata=dict(static=True))
@@ -86,6 +93,8 @@ class StreamedWeight(WeightHandle):
     dtype_str: str = dataclasses.field(metadata=dict(static=True))
     execution: str = dataclasses.field(default="materialize",
                                        metadata=dict(static=True))
+    flat: bool = dataclasses.field(default=False,
+                                   metadata=dict(static=True))
 
     def materialize(self, codec=None):
         # moveaxis'd layout; the ambient codec decodes unless one is passed
@@ -148,9 +157,12 @@ def handle_spec(handle: WeightHandle) -> dict:
     checkpoint manifest needs to rebuild it around a deserialized stream
     bundle (docs/CHECKPOINT.md)."""
     if isinstance(handle, StreamedWeight):
-        return {"kind": "stream", "tp_axis": handle.tp_axis,
+        spec = {"kind": "stream", "tp_axis": handle.tp_axis,
                 "layer_shape": list(handle.layer_shape),
                 "dtype": handle.dtype_str, "execution": handle.execution}
+        if handle.flat:
+            spec["flat"] = True
+        return spec
     if isinstance(handle, FusedWeight):
         return {"kind": "fused", "k": handle.k, "n": handle.n,
                 "dtype": handle.dtype_str}
@@ -166,7 +178,8 @@ def handle_from_spec(spec: dict, ct: CompressedTensor) -> WeightHandle:
         return StreamedWeight(ct=ct, tp_axis=int(spec["tp_axis"]),
                               layer_shape=tuple(spec["layer_shape"]),
                               dtype_str=spec["dtype"],
-                              execution=spec.get("execution", "materialize"))
+                              execution=spec.get("execution", "materialize"),
+                              flat=bool(spec.get("flat", False)))
     if kind == "fused":
         return FusedWeight(ct=ct, k=int(spec["k"]), n=int(spec["n"]),
                            dtype_str=spec["dtype"])
@@ -178,6 +191,8 @@ def finish_materialize(handle, w_stacked):
     leaf (un-permute / un-tile the storage layout)."""
     if isinstance(handle, StreamedWeight):
         w = jnp.moveaxis(w_stacked, 1, 1 + handle.tp_axis)
+        if handle.flat:        # L=1 stack of a 2-D leaf: drop the stack dim
+            w = w[0]
         return w.astype(jnp.dtype(handle.dtype_str))
     if isinstance(handle, FusedWeight):
         t = MATMUL_TILE
@@ -212,18 +227,37 @@ def materialize_full_many(handles, codec=None):
             for h, d in zip(handles, decs)]
 
 
-def resolve(tree, codec=None):
+def resolve(tree, codec=None, *, prefetched=None):
     """Per-layer handle resolution — the serve step's replacement for the
     retired ``decompressor=`` hook.  Storage-only handles (StreamedWeight in
     "materialize" execution) become dense arrays; matmul-capable handles
     pass through for the layers to execute; everything else is untouched.
-    Called on layer slices inside ``lax.scan`` / the unrolled loop, so XLA
-    overlaps layer l+1's decompression with layer l's compute as before.
+
+    Without prefetch, every StreamedWeight decodes serially inside the
+    layer it belongs to.  The measured overlap scheduler
+    (``runtime.overlap``, benchmarks/bench_overlap.py) instead decodes
+    layer l+1 one step ahead and hands the result back here:
+    ``prefetched`` maps flatten slots (``tree`` flattened with
+    ``is_leaf=is_handle``) to already-decoded dense weights — a
+    "materialize" handle at that slot is replaced by the buffer directly,
+    a "matmul" handle becomes a :class:`DenseWeight` around it (same
+    canonical tiled contraction, so logits are bit-identical either way).
     ``codec`` pins the decoding codec; default is the ambient codec at
     trace time.
     """
-    def one(leaf):
-        if isinstance(leaf, StreamedWeight) and leaf.execution != "matmul":
-            return leaf.materialize(codec)
-        return leaf
-    return jax.tree.map(one, tree, is_leaf=is_handle)
+    flat, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_handle)
+    pre = prefetched or {}
+    out = []
+    for slot, leaf in enumerate(flat):
+        if slot in pre:
+            if not isinstance(leaf, StreamedWeight):
+                raise TypeError(
+                    f"prefetched slot {slot} is not a StreamedWeight: "
+                    f"{type(leaf).__name__}")
+            w = pre[slot]
+            out.append(DenseWeight(w=w) if leaf.execution == "matmul" else w)
+        elif isinstance(leaf, StreamedWeight) and leaf.execution != "matmul":
+            out.append(leaf.materialize(codec))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
