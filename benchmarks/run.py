@@ -26,6 +26,9 @@ Modules:
                                 decode dispatch accounting)
   bench_faults      ISSUE 6    (restore latency under injected fault rates:
                                 transient I/O, decode failure, corruption)
+  bench_mesh        ISSUE 8    (sharded vs replicated restore, per-link
+                                ledger: collective traffic = compressed
+                                bytes only; needs a multi-device mesh)
 """
 from __future__ import annotations
 
@@ -41,7 +44,7 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 
 SUITE_ORDER = ["ratio", "throughput", "blocksize", "ablation", "params",
                "transfer", "pipeline", "e2e", "serve", "overlap", "ckpt",
-               "faults"]
+               "faults", "mesh"]
 
 
 def _env_flag(name: str) -> bool:
@@ -99,13 +102,14 @@ def main(argv=None) -> None:
         os.environ["BENCH_SMOKE"] = "1"
 
     from . import (bench_ablation, bench_blocksize, bench_ckpt, bench_e2e,
-                   bench_faults, bench_overlap, bench_params, bench_pipeline,
-                   bench_ratio, bench_serve, bench_throughput, bench_transfer)
+                   bench_faults, bench_mesh, bench_overlap, bench_params,
+                   bench_pipeline, bench_ratio, bench_serve, bench_throughput,
+                   bench_transfer)
     by_suite = {_suite_name(m.__name__): m for m in
                 [bench_ratio, bench_throughput, bench_blocksize,
                  bench_ablation, bench_params, bench_transfer,
                  bench_pipeline, bench_e2e, bench_serve, bench_overlap,
-                 bench_ckpt, bench_faults]}
+                 bench_ckpt, bench_faults, bench_mesh]}
     wanted = [s.removeprefix("bench_") for s in args.suites] or SUITE_ORDER
     unknown = [s for s in wanted if s not in by_suite]
     if unknown:

@@ -280,10 +280,22 @@ class CheckpointManager:
         # build_serving_handle code path), so load_for_serving can
         # deserialize them straight into handles
         if serve_jobs:
-            shards = 1 if self.serving_layout == "fused" \
-                else self.serving_shards
-            cts = self.codec.compress_stacked_many(
-                [j["arr"] for j in serve_jobs], shards=shards)
+            # per-job shard width, mirroring assign_weight_modes: fused tile
+            # streams shard only when the tile-block count divides (pad
+            # blocks would corrupt the kernel's flat tile order), stream
+            # bundles always take the manager's width
+            cts = [None] * len(serve_jobs)
+            by_shards: dict = {}
+            for j_ix, job in enumerate(serve_jobs):
+                job_shards = (rt_streaming.fused_shards(
+                    job["k"], job["n"], self.serving_shards)
+                    if job["kind"] == "fused" else self.serving_shards)
+                by_shards.setdefault(job_shards, []).append(j_ix)
+            for job_shards, idxs in sorted(by_shards.items()):
+                group = self.codec.compress_stacked_many(
+                    [serve_jobs[j]["arr"] for j in idxs], shards=job_shards)
+                for j, ct in zip(idxs, group):
+                    cts[j] = ct
             for job, ct in zip(serve_jobs, cts):
                 i = job["slot"]
                 handle = rt_streaming.build_serving_handle(job, ct)
@@ -366,8 +378,10 @@ class CheckpointManager:
             manifest["serving_layout"] = {
                 "mode": self.serving_layout,
                 "min_bytes": self.serving_min_bytes,
-                "shards": (1 if self.serving_layout == "fused"
-                           else self.serving_shards)}
+                # requested width; fused records narrow per record via
+                # rt_streaming.fused_shards (each record's ct stores its
+                # actual shard count)
+                "shards": self.serving_shards}
         raw_total = comp_total = 0
         offsets = [0] * n_packs
         # records are serialized by the thread pool and STREAMED round-robin
@@ -609,6 +623,8 @@ class CheckpointManager:
                         raise
                     self._quarantine(report, e, manifest, str(err))
                     continue
+                self.codec.count_link("disk", len(blob),
+                                      dense=e.get("mode") == "npraw")
                 yield e, blob
             return
         if fmt != MANIFEST_FORMAT:
@@ -644,6 +660,10 @@ class CheckpointManager:
                             f"{err}") from err
                     self._quarantine(report, e, manifest, str(err))
                     continue
+                # the disk link of the per-link ledger: compressed record
+                # payloads vs raw (npraw) bytes actually read off storage
+                self.codec.count_link("disk", len(payload),
+                                      dense=e.get("mode") == "npraw")
                 yield e, payload
 
     def _decode_npraw(self, e, blob):
@@ -655,20 +675,26 @@ class CheckpointManager:
             raise CheckpointError(
                 f"{e['name']}: raw payload holds {arr.size} elements, "
                 f"manifest declares shape {e['shape']}")
-        # counted on this manager's codec like every other record upload
-        return enec_wire.h2d(arr.reshape(e["shape"]), self.codec)
+        # counted on this manager's codec like every other record upload —
+        # these are DENSE bytes on the h2d link (the raw escape)
+        return enec_wire.h2d(arr.reshape(e["shape"]), self.codec,
+                             dense=True)
 
-    def _record_ct(self, e, blob, packs=None):
+    def _record_ct(self, e, blob, packs=None, stream_place=None):
         """Deserialize one compressed record's payload — the compressed
         streams move to device here (counted on this manager's codec);
-        nothing is decoded yet.  Any :class:`WireError` leaves with the
-        record's (leaf name, pack file, byte offset) attached."""
+        nothing is decoded yet.  ``stream_place`` (a
+        ``collectives.stream_placer`` hook) uploads each stream leaf with
+        its TP-shard dim on the target mesh axis, so a shard's pack bytes
+        reach the owning devices only.  Any :class:`WireError` leaves with
+        the record's (leaf name, pack file, byte offset) attached."""
         pack = packs[e["pack"]] if packs is not None and "pack" in e \
             else None
         try:
             return enec_wire.from_wire(blob, codec=self.codec,
                                        record=e["name"], pack=pack,
-                                       offset=e.get("offset"))
+                                       offset=e.get("offset"),
+                                       stream_place=stream_place)
         except enec_wire.WireError as err:
             err.with_context(record=e["name"], pack=pack,
                              offset=e.get("offset"))
@@ -900,7 +926,7 @@ class CheckpointManager:
                          step: Optional[int] = None, prefix: str = "",
                          min_bytes: int = rt_streaming.MIN_STREAM_BYTES,
                          shards: int = rt_streaming.STREAM_SHARDS,
-                         policy: str = "strict"):
+                         policy: str = "strict", mesh=None):
         """Restore ONLY the weight records into a serving handle tree.
 
         ``like_params`` is the (dense) params structure — ShapeDtypeStructs
@@ -925,9 +951,18 @@ class CheckpointManager:
         surviving buckets); logits stay bit-identical because every handle
         mode executes the same canonical contraction.  The
         :class:`RestoreReport` on ``last_restore_report`` enumerates each
-        quarantined record's cause and fallback."""
+        quarantined record's cause and fallback.
+
+        ``mesh`` restores straight onto a serving mesh: adopted records'
+        stream shards upload to their OWNING devices only (the per-shard
+        pack bytes never fan out over h2d — ``collectives.stream_placer``),
+        and the finished tree is placed per ``collectives.serving_pspecs``
+        (stream shards on the "model" axis, dense math replicated)."""
         if mode not in rt_streaming.WEIGHT_MODES:
             raise ValueError(f"unknown weight mode {mode!r}")
+        from repro.runtime import collectives as rt_collectives
+        stream_place = (None if mesh is None
+                        else rt_collectives.stream_placer(mesh))
         cdir, manifest = self._step_dir(step)
         report = self._begin_report(policy, manifest)
         rep = report if policy == "degraded" else None
@@ -966,13 +1001,21 @@ class CheckpointManager:
                                   int(spec["k"]), int(spec["n"]))
                 self._check_leaf(name, leaf_shape, like,
                                  dtype=spec["dtype"])
-                ct = self._record_ct(e, payload, packs=man.get("packs"))
+                ct = self._record_ct(e, payload, packs=man.get("packs"),
+                                     stream_place=stream_place)
                 # adopt only when the stored stream layout matches the
-                # requested TP width (fused mode forces shards=1) — a
-                # mismatch joins the batched decode + device re-layout
-                # below instead of silently keeping the ckpt's sharding
-                req_shards = 1 if mode == "fused" else shards
-                if ct.shards == req_shards:
+                # width assign_weight_modes would pick for this record —
+                # fused tile streams narrow per record when the tile-block
+                # count doesn't divide; a mismatch joins the batched
+                # decode + device re-layout below instead of silently
+                # keeping the ckpt's sharding
+                req_shards = (rt_streaming.fused_shards(
+                    int(spec["k"]), int(spec["n"]), shards)
+                    if spec["kind"] == "fused" else shards)
+                # a fallback copy adopts at whatever width the older step
+                # stored — any width executes bit-identically, and the
+                # damaged record must not lose its handle to a re-layout
+                if ct.shards == req_shards or is_fallback:
                     vals[name] = handle_from_spec(spec, ct)
                     return
                 pending.append((name, like, handle_from_spec(spec, ct)))
@@ -1001,4 +1044,9 @@ class CheckpointManager:
         tree = rt_streaming.assign_weight_modes(
             tree, mode=mode, min_bytes=min_bytes, shards=shards,
             codec=self.codec)
+        if mesh is not None:
+            # records re-laid-out by the policy (and every replicated
+            # upload) land on their final serving placement: stream shards
+            # on the "model" axis, everything else replicated
+            tree = rt_collectives.place_serving_tree(tree, mesh)
         return tree, manifest

@@ -55,6 +55,17 @@ from .params import DEFAULT_BLOCK_ELEMS, EnecParams, expected_ratio
 
 BACKENDS = ("reference", "pallas")
 
+# Transfer-ledger links: every byte a codec moves is attributed to exactly
+# one link, split compressed-vs-dense (paper thesis: the links should only
+# ever carry compressed bytes).
+#   h2d            host->device uploads (wire deserialization, raw leaves)
+#   d2d_allgather  device<->device stream gathers over a mesh axis
+#                  (compressed-bytes all-gather for FSDP-style weights)
+#   d2d_psum       device<->device gradient collectives
+#                  (optim.grad_compress.compressed_allreduce)
+#   disk           checkpoint pack-file record reads
+LINKS = ("h2d", "d2d_allgather", "d2d_psum", "disk")
+
 _flatten_streams = block_codec.flatten_blocks
 
 
@@ -250,6 +261,8 @@ class Codec:
         self._decode_stats = {"compiles": 0, "cache_hits": 0,
                               "dispatches": 0, "padded_blocks": 0}
         self._transfer = {"h2d_bytes": 0, "h2d_arrays": 0}
+        self._links = {link: {"compressed_bytes": 0, "dense_bytes": 0,
+                              "ops": 0} for link in LINKS}
 
     def __repr__(self):
         c = self.config
@@ -316,20 +329,51 @@ class Codec:
             self._decode_cache.clear()
 
     def transfer_stats(self) -> dict:
-        """Bytes staged host->device through this codec (wire
-        deserialization + checkpoint raw-leaf uploads).  The compressed-
-        restore acceptance test uses this to prove no dense weight ever
-        crossed the host->device link."""
-        return dict(self._transfer)
+        """Bytes this codec moved, per link (see :data:`LINKS`).
+
+        The flat ``h2d_bytes`` / ``h2d_arrays`` keys are the legacy h2d-only
+        view (the compressed-restore acceptance test uses them to prove no
+        dense weight ever crossed the host->device link); ``links`` is the
+        full per-link ledger with a compressed-vs-dense split per link.
+        """
+        out = dict(self._transfer)
+        out["links"] = self.link_stats()
+        return out
+
+    def link_stats(self) -> dict:
+        """The per-link transfer ledger alone:
+        ``{link: {compressed_bytes, dense_bytes, ops}}``."""
+        return {link: dict(v) for link, v in self._links.items()}
 
     def reset_transfer_stats(self) -> None:
         for k in self._transfer:
             self._transfer[k] = 0
+        for entry in self._links.values():
+            for k in entry:
+                entry[k] = 0
 
-    def count_h2d(self, nbytes: int, arrays: int = 1) -> None:
-        """Record a host->device upload (``core.wire.h2d`` calls this)."""
-        self._transfer["h2d_bytes"] += int(nbytes)
-        self._transfer["h2d_arrays"] += int(arrays)
+    def count_link(self, link: str, nbytes: int, *, dense: bool = False,
+                   ops: int = 1) -> None:
+        """Attribute ``nbytes`` moved over ``link`` (one of :data:`LINKS`).
+        ``dense=True`` marks payloads that are NOT fixed-length wire
+        streams (raw checkpoint leaves, incompressible escapes) — the
+        quantity the per-link acceptance gates require to stay zero on the
+        collective links."""
+        if link not in self._links:
+            raise ValueError(f"unknown transfer link {link!r}; "
+                             f"expected one of {LINKS}")
+        entry = self._links[link]
+        entry["dense_bytes" if dense else "compressed_bytes"] += int(nbytes)
+        entry["ops"] += int(ops)
+        if link == "h2d":
+            self._transfer["h2d_bytes"] += int(nbytes)
+            self._transfer["h2d_arrays"] += int(ops)
+
+    def count_h2d(self, nbytes: int, arrays: int = 1, *,
+                  dense: bool = False) -> None:
+        """Record a host->device upload (``core.wire.h2d`` calls this).
+        Thin alias for ``count_link("h2d", ...)``."""
+        self.count_link("h2d", nbytes, dense=dense, ops=arrays)
 
     # -- bucketing / compile caches --------------------------------------
 
@@ -875,15 +919,32 @@ class Codec:
     # -- tile-wise compression for the fused decompress+matmul kernel -----
 
     def tile_weights_for_fusion_many(self, ws: Sequence[Any],
-                                     p: Optional[EnecParams] = None
+                                     p: Optional[EnecParams] = None,
+                                     shards: int = 1
                                      ) -> List[Optional[CompressedTensor]]:
         """Compress many (L, K, N) / (K, N) matmul weights tile-wise for
         the fused kernel, riding :meth:`compress_stacked_many`: per-stack
         searched params, one encode dispatch per bucket, never-worse
-        escape intact (``None`` entries must stay dense)."""
+        escape intact (``None`` entries must stay dense).
+
+        ``shards > 1`` splits each layer's tile-block axis into contiguous
+        TP shard ranges; the flat (n-major) tile order is preserved, so the
+        fused kernel consumes the re-flattened streams unchanged.  Every
+        weight's tile-block count must divide by ``shards`` (no pad blocks
+        are allowed inside a fused stream — see
+        :func:`repro.runtime.streaming.fused_shards`)."""
+        tiles = [matmul_tiles(w) for w in ws]
+        if shards > 1:
+            for w, t in zip(ws, tiles):
+                blocks = t.shape[-1] // DEFAULT_BLOCK_ELEMS
+                if blocks % shards:
+                    raise ValueError(
+                        f"fused tile stream of {tuple(jnp.shape(w))} has "
+                        f"{blocks} tile blocks — not divisible into "
+                        f"{shards} shards (pad blocks would corrupt the "
+                        f"kernel's flat tile order)")
         return self.compress_stacked_many(
-            [matmul_tiles(w) for w in ws], p=p,
-            block_elems=DEFAULT_BLOCK_ELEMS, shards=1)
+            tiles, p=p, block_elems=DEFAULT_BLOCK_ELEMS, shards=shards)
 
     def tile_weights_for_fusion(self, w, p: Optional[EnecParams] = None
                                 ) -> CompressedTensor:

@@ -124,11 +124,18 @@ def transfer_stats() -> dict:
     return _ambient_codec().transfer_stats()
 
 
-def h2d(arr, codec=None):
-    """Upload one host array to the default device, counting its bytes on
-    ``codec`` (default: the ambient codec)."""
+def h2d(arr, codec=None, *, dense=False, place=None):
+    """Upload one host array, counting its bytes on ``codec`` (default: the
+    ambient codec).  ``dense=True`` attributes the bytes to the ledger's
+    dense column (raw checkpoint leaves — payloads that are not fixed-length
+    wire streams).  ``place``, when given, is a callable
+    ``place(host_array) -> jax.Array`` that performs the upload instead of
+    the default whole-array ``jnp.asarray`` — the mesh restore path uses it
+    to send each stream shard to its owning device only."""
     arr = np.asarray(arr)
-    (codec or _ambient_codec()).count_h2d(arr.nbytes)
+    (codec or _ambient_codec()).count_h2d(arr.nbytes, dense=dense)
+    if place is not None:
+        return place(arr)
     return jnp.asarray(arr)
 
 
@@ -288,7 +295,7 @@ def _expected_raw_nbytes(mode: str, shape, dtype_str: str) -> int:
 
 
 def from_wire(buf, codec=None, *, record=None, pack=None,
-              offset=None) -> CompressedTensor:
+              offset=None, stream_place=None) -> CompressedTensor:
     """Parse one record from an EXACT buffer slice (a framed payload or a
     whole v1 blob file).  Every field is validated; short buffers, trailing
     garbage, unknown tags and impossible stream lengths raise
@@ -297,6 +304,16 @@ def from_wire(buf, codec=None, *, record=None, pack=None,
     exactly the compressed bytes.  ``record``/``pack``/``offset`` are
     optional caller context attached to every raise (leaf name, pack file,
     absolute pack offset — what a quarantine line needs).
+
+    ``stream_place``, when given, is a callable
+    ``stream_place(host_array, shard_dim) -> jax.Array`` used to upload the
+    enec stream leaves instead of the default single-device ``jnp.asarray``;
+    ``shard_dim`` is the axis index of the TP shard dim in the device
+    layout, or ``None`` for unsharded records.  The mesh restore path
+    (``CheckpointManager.load_for_serving(mesh=...)``) uses it to place each
+    shard's wire bytes on its owning devices only — the per-shard pack never
+    fans out to the whole mesh over h2d.  Raw/const payloads always upload
+    replicated (they are consumed on every device).
     """
     def _err(msg):
         return WireError(msg, record=record, pack=pack, offset=offset)
@@ -336,7 +353,7 @@ def from_wire(buf, codec=None, *, record=None, pack=None,
                 f"{mode} record carries {raw.nbytes} payload bytes, "
                 f"expected {expect} for shape {shape} dtype {dtype_str}")
         return CompressedTensor(
-            streams=None, raw_bytes=h2d(raw, codec),
+            streams=None, raw_bytes=h2d(raw, codec, dense=(mode == "raw")),
             fmt_name=_FMT_FROM_TAG.get(fmt_tag, "bf16"), params=None,
             shape=shape, dtype_str=dtype_str, block_elems=block_elems,
             shards=shards, mode=mode)
@@ -411,10 +428,14 @@ def from_wire(buf, codec=None, *, record=None, pack=None,
     for d in lead:
         flat //= d
 
+    shard_dim = len(lead) - 1 if shards > 1 else None
+
     def relayout(a):
         tail = a.shape[1:]
-        return h2d(np.ascontiguousarray(a.reshape(lead + (flat,) + tail)),
-                   codec)
+        host = np.ascontiguousarray(a.reshape(lead + (flat,) + tail))
+        place = (None if stream_place is None
+                 else lambda h: stream_place(h, shard_dim))
+        return h2d(host, codec, place=place)
 
     streams = BlockStreams(
         mask=relayout(mask), low=relayout(low), high=relayout(high),

@@ -75,15 +75,29 @@ def decompress_matmul(x, ct: CompressedTensor, k: int, n: int, *,
     ride the scanned params, so the kernel works unmodified inside the
     decode scan.  Ragged k/n are handled by the zero-padded tile layout:
     x is zero-padded to the tile multiple and the output sliced back.
+
+    TP-sharded tile streams (``ct.shards > 1``, layout ``(S, B/S, w)``) are
+    accepted: the flat tile order is n-major (``t = n_tile * k_tiles +
+    k_tile``) and the shard split is a contiguous partition of that flat
+    axis, so collapsing the shard dim restores the exact unsharded layout —
+    no data movement, just a reshape.  The streams must be gathered
+    (replicated) before the call; ``FusedWeight.matmul`` does this through
+    ``collectives.maybe_gather_ct`` under an ambient serving mesh.
     """
     m = x.shape[0]
     assert x.shape[1] == k, (x.shape, k)
-    assert ct.mode == "enec" and ct.shards == 1, \
-        "fused kernel requires unsharded enec tile streams"
+    assert ct.mode == "enec", "fused kernel requires enec tile streams"
     kp, np_ = -(-k // TILE) * TILE, -(-n // TILE) * TILE
     k_tiles, n_tiles = kp // TILE, np_ // TILE
     s = ct.streams
-    assert s.mask.ndim == 2, "stacked streams: slice one layer first"
+    assert s.mask.ndim == (3 if ct.shards > 1 else 2), \
+        "stacked streams: slice one layer first"
+    if ct.shards > 1:
+        # (S, B/S, ...) -> (B, ...): contiguous shard ranges of the n-major
+        # flat tile axis — the encode split (stacked_blocks) never pads a
+        # fused stream (enforced by tile_weights_for_fusion_many /
+        # streaming.fused_shards), so this is the bit-exact inverse
+        s = codec.flatten_blocks(s)
     assert s.mask.shape[0] == k_tiles * n_tiles, \
         (s.mask.shape, k_tiles, n_tiles)
     if kp != k:

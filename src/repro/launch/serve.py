@@ -70,7 +70,23 @@ class ServerHealth:
 HEALTH = ServerHealth()
 
 
-def _restore_params(args, model, mode, codec, policy):
+def _link_line(tag, codec):
+    """One-line per-link transfer ledger (docs/DISTRIBUTED.md): which links
+    moved bytes and whether any of them carried DENSE weights (a sharded
+    serve should show dense traffic on no link but the npraw h2d escape)."""
+    live = {k: v for k, v in codec.link_stats().items() if v["ops"]}
+    if not live:
+        return f"[launch.serve] {tag} links: none"
+    parts = []
+    for k, v in live.items():
+        s = f"{k}:{v['compressed_bytes'] / 1e6:.1f}MB"
+        if v["dense_bytes"]:
+            s += f"+{v['dense_bytes'] / 1e6:.1f}MB-dense"
+        parts.append(s)
+    return f"[launch.serve] {tag} links: " + " ".join(parts)
+
+
+def _restore_params(args, model, mode, codec, policy, mesh=None):
     """--ckpt: weights come from the checkpoint, never from init.  The
     launcher's explicit codec owns the restore: its transfer counter and
     decoder cache stats are what gets reported.
@@ -93,7 +109,8 @@ def _restore_params(args, model, mode, codec, policy):
     t0 = time.perf_counter()
     params, _ = mgr.load_for_serving(like, mode=mode, prefix=prefix,
                                      min_bytes=args.min_bytes,
-                                     shards=args.shards, policy="degraded")
+                                     shards=args.shards, policy="degraded",
+                                     mesh=mesh)
     jax.block_until_ready(jax.tree.leaves(params))
     dt = time.perf_counter() - t0
     ts = codec.transfer_stats()
@@ -107,6 +124,7 @@ def _restore_params(args, model, mode, codec, policy):
           f"{dst['dispatches']} decode dispatches, "
           f"io retries {rs.get('retries', 0)}/"
           f"{rs.get('attempts', 0)} attempts)")
+    print(_link_line("restore", codec))
     return params, report
 
 
@@ -132,8 +150,20 @@ def main():
                          "either way")
     ap.add_argument("--min-bytes", type=int, default=4096,
                     help="smallest leaf worth compressing")
-    ap.add_argument("--shards", type=int, default=2,
-                    help="stream-mode TP shard count for the block dim")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="stream-mode TP shard count for the block dim "
+                         "(default: the serving mesh's model-axis width "
+                         "under --tp/--mesh, else 2)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="model-axis width of the serving mesh "
+                         "(docs/DISTRIBUTED.md): stream shards live "
+                         "distributed over this axis and are gathered as "
+                         "compressed bytes at consumption; must divide "
+                         "the device count; 1 = single-device layout")
+    ap.add_argument("--mesh", action="store_true",
+                    help="build a (data, model) serving mesh with the "
+                         "largest model axis the local device count "
+                         "divides by (shorthand for --tp <max divisor>)")
     ap.add_argument("--codec-backend", default="reference",
                     choices=("reference", "pallas"),
                     help="encode/decode backend of the launcher's Codec "
@@ -162,6 +192,17 @@ def main():
     policy = "strict" if args.strict else "degraded"
     HEALTH.state, HEALTH.detail = "initializing", ""
 
+    mesh = None
+    if args.mesh or args.tp > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model="max" if args.mesh and args.tp <= 1
+                              else args.tp)
+        print(f"[launch.serve] serving mesh axes {dict(mesh.shape)}")
+    if args.shards is None:
+        # shard width follows the mesh so the stream shards actually land
+        # one-per-device (an explicit --shards may still over/under-shard)
+        args.shards = mesh.shape["model"] if mesh is not None else 2
+
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = dataclasses.replace(cfg, scan_layers=True, overlap=args.overlap)
     model = build_model(cfg)
@@ -175,7 +216,7 @@ def main():
         HEALTH.state = "restoring"
         try:
             params, report = _restore_params(args, model, mode, codec,
-                                             policy)
+                                             policy, mesh=mesh)
         except (CheckpointError, FileNotFoundError) as e:
             HEALTH.state, HEALTH.detail = "failed", str(e)
             print(f"[launch.serve] restore FAILED: {e}")
@@ -199,6 +240,9 @@ def main():
         params = assign_weight_modes(params, mode=mode,
                                      min_bytes=args.min_bytes,
                                      shards=args.shards, codec=codec)
+        if mesh is not None:
+            from repro.runtime.collectives import place_serving_tree
+            params = place_serving_tree(params, mesh)
         if args.save_ckpt:
             # the handle tree is saved directly (its stream bundles become
             # the records), so the weights are compressed exactly once
@@ -235,8 +279,17 @@ def main():
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
     # the jitted steps trace under this codec: streamed handles decode
-    # through ITS compile caches, not the process default's
-    with use_codec(codec):
+    # through ITS compile caches, not the process default's.  Under a
+    # serving mesh, every handle consumption point gathers its compressed
+    # shards first (collectives.maybe_gather_ct) — the ambient context is
+    # read at trace time
+    import contextlib
+    if mesh is not None:
+        from repro.runtime.collectives import use_serving_mesh
+        mesh_ctx = use_serving_mesh(mesh)
+    else:
+        mesh_ctx = contextlib.nullcontext()
+    with use_codec(codec), mesh_ctx:
         t0 = time.perf_counter()
         logits, cache = prefill(params, {"tokens": prompts})
         logits.block_until_ready()
@@ -261,6 +314,7 @@ def main():
             print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
                   f"(prefill only; --tokens 1 has no decode steps) "
                   f"mode={mode}")
+    print(_link_line("serve", codec))
     print("[launch.serve] seq0:", jnp.stack(toks, 1)[0].tolist())
 
 

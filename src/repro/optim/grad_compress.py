@@ -24,8 +24,10 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import codec
+from repro.core.codec_api import current_codec
 from repro.core.dtypes import format_for
 from repro.core.params import EnecParams
 
@@ -44,6 +46,15 @@ def compressed_allreduce(x, axis_name: str, p: EnecParams,
     gathered = jax.tree.map(
         lambda a: jax.lax.all_gather(a, axis_name), streams)
     n = gathered.mask.shape[0]
+    # ledger: each pod ships its local streams to the n-1 peers — only
+    # compressed bytes ride the slow axis (counted once per trace; the
+    # schedule is static, so per-step traffic = counted bytes x steps)
+    leaves = jax.tree.leaves(streams)
+    current_codec().count_link(
+        "d2d_psum",
+        (n - 1) * sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+                      for a in leaves),
+        ops=len(leaves))
 
     total = jnp.zeros(x.shape, jnp.float32)
     for i in range(n):  # static pod count (2): unrolled decode+sum

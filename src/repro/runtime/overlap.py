@@ -118,11 +118,18 @@ def decode_layer(schedule: OverlapSchedule, index, codec=None) -> tuple:
     the per-step prefetch dispatch.  Returns the finished dense weights
     (un-permuted, target dtype) in slot order, bit-identical to
     ``StreamedWeight.materialize`` on the same slice."""
+    from repro.runtime.collectives import maybe_gather_ct
     codec = codec or current_codec()
     handles = [schedule.leaves[s] for s in schedule.slots]
-    cts = [dataclasses.replace(
-               h.ct, streams=jax.tree.map(lambda a: _take(a, index),
-                                          h.ct.streams))
+    # slice layer `index`, then (under an ambient serving mesh) gather the
+    # layer's compressed shards over the mesh axis — the prefetch step's
+    # interconnect traffic is this layer's wire payloads, never its dense
+    # weights, so overlap composes with sharding
+    cts = [maybe_gather_ct(
+               dataclasses.replace(
+                   h.ct, streams=jax.tree.map(lambda a: _take(a, index),
+                                              h.ct.streams)),
+               codec)
            for h in handles]
     decs = codec.decompress_stacked_many(cts, exact=True)
     return tuple(

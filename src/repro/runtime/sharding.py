@@ -100,11 +100,14 @@ def param_pspec(path: str, shape, mesh: Mesh, mode: str = "train") -> P:
     def m(dim, ax):
         return _maybe(dim, mesh, ax)
 
-    # ENEC stream arrays (weight streaming): (L, S, blocks, width) with the
-    # TP-shard dim S on "model" — decompression stays shard-local.
+    # ENEC stream arrays reached as bare path leaves: replicate.  Stream
+    # placement is metadata-driven — :func:`param_pspecs` flattens handles
+    # and CompressedTensors as leaves and routes them through
+    # :func:`handle_pspecs` / :func:`ct_pspecs`, which read the shard
+    # layout off the tensor itself.  The old path heuristic here
+    # ("/streams/" + hard-coded shard-dim index 1) mis-sharded the flat
+    # L=1 perm layout and anything unsharded with a divisible dim 1.
     if "/streams/" in path or "/ct/" in path:
-        if rank >= 2:
-            return P(None, m(shape[1], "model"), *((None,) * (rank - 2)))
         return P(*((None,) * rank))
     if name == "embed":
         return P(m(shape[0], "model"), m(shape[1], fsdp))
@@ -137,10 +140,76 @@ def param_pspec(path: str, shape, mesh: Mesh, mode: str = "train") -> P:
     return P(*((None,) * rank))
 
 
+def _ct_stacked(ct) -> bool:
+    """Does the stream layout carry a leading layer-stack dim?  Mirrors
+    ``codec_api._stack_dim`` off stream rank alone, so it works on
+    ``ShapeDtypeStruct`` trees too."""
+    base = 3 if ct.shards > 1 else 2
+    return len(ct.streams.mask.shape) == base + 1
+
+
+def _stream_leaf_rule(ct, mesh: Mesh, axis="model"):
+    """Per-leaf PartitionSpec rule for one CompressedTensor's stream arrays,
+    derived from the tensor's OWN layout metadata (never from tree paths):
+    the TP-shard dim — dim 0 per-layer, dim 1 under a layer stack — goes on
+    ``axis`` when ``ct.shards`` divides the mesh axis; everything else
+    (const/raw payloads, unsharded streams) replicates."""
+    ax = None
+    shard_ix = 0
+    if ct.mode == "enec" and ct.shards > 1:
+        shard_ix = 1 if _ct_stacked(ct) else 0
+        ax = _maybe(ct.shards, mesh, axis)
+
+    def rule(a):
+        rank = len(a.shape)
+        names = [None] * rank
+        if ax is not None and rank > shard_ix \
+                and a.shape[shard_ix] == ct.shards:
+            names[shard_ix] = ax
+        return P(*names)
+
+    return rule
+
+
+def ct_pspecs(ct, mesh: Mesh, axis="model"):
+    """PartitionSpec tree (same pytree structure as ``ct``) for one bare
+    :class:`CompressedTensor`."""
+    return jax.tree.map(_stream_leaf_rule(ct, mesh, axis), ct)
+
+
+def handle_pspecs(handle, mesh: Mesh, axis="model"):
+    """PartitionSpec tree for one serving weight handle, derived from its
+    metadata (the satellite fix for the old ``"/streams/"`` path
+    heuristic).  Stream/fused handles shard their wire streams' TP dim on
+    ``axis``; dense handles replicate (the sharded-serving compute model
+    keeps dense math replicated so logits stay bit-identical to
+    single-device — see docs/DISTRIBUTED.md)."""
+    ct = getattr(handle, "ct", None)
+    if ct is None:
+        return jax.tree.map(lambda a: P(*((None,) * len(a.shape))), handle)
+    return jax.tree.map(_stream_leaf_rule(ct, mesh, axis), handle)
+
+
 def param_pspecs(params, mesh: Mesh, mode: str = "train"):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    specs = [param_pspec(_path_str(path), leaf.shape, mesh, mode)
-             for path, leaf in flat]
+    """Whole-tree PartitionSpecs: weight handles and CompressedTensors are
+    treated as leaves and get metadata-derived stream specs; plain array
+    leaves go through the name/shape rules of :func:`param_pspec`."""
+    from repro.core.api import CompressedTensor
+    from repro.runtime.weights import is_handle
+
+    def _special(x):
+        return is_handle(x) or isinstance(x, CompressedTensor)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_special)
+    specs = []
+    for path, leaf in flat:
+        if is_handle(leaf):
+            specs.append(handle_pspecs(leaf, mesh))
+        elif isinstance(leaf, CompressedTensor):
+            specs.append(ct_pspecs(leaf, mesh))
+        else:
+            specs.append(param_pspec(_path_str(path), leaf.shape, mesh, mode))
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 

@@ -21,8 +21,11 @@ TP locality (stream mode): a weight whose axis ``k`` is model-sharded is
 compressed in a *moveaxis(k -> 0)* layout with the block dimension sharded
 on "model".  Decompression is then shard-local (blocks stay on their
 device), the un-permute is a metadata transpose, and no resharding
-collectives appear on the latency path.  Fused tile streams are block-
-ordered (n, k) and not TP-shardable, so fused mode forces ``shards=1``.
+collectives appear on the latency path.  Fused tile streams are n-major
+block-ordered; they shard whenever the tile-block count divides the
+requested shard width (:func:`fused_shards` — a contiguous shard range of
+the flat tile axis re-flattens to the exact kernel layout), falling back
+to ``shards=1`` per leaf when pad blocks would corrupt the tile order.
 
 Only leaves >= ``min_bytes`` are compressed (norms/biases stay raw —
 negligible bytes, and the decode cost would not amortize).
@@ -35,8 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import (SUPPORTED_FLOAT_DTYPES, CompressedTensor,
-                            abstract_compressed, matmul_tiles)
+from repro.core.api import (MATMUL_TILE, SUPPORTED_FLOAT_DTYPES,
+                            CompressedTensor, abstract_compressed,
+                            matmul_tiles)
 from repro.core.codec_api import current_codec
 from repro.core.params import EnecParams
 from repro.runtime.overlap import OVERLAP_MODES, \
@@ -93,6 +97,19 @@ def _tp_axis_for(path: str, shape) -> int:
     if name in ("e_gate", "e_up", "e_down"):
         return len(shape) - 3
     return len(shape) - 1
+
+
+def fused_shards(k: int, n: int, shards: int) -> int:
+    """TP shard count a fused ``(k, n)`` tile stream can actually use:
+    ``shards`` when the n-major flat tile-block count divides it evenly —
+    each shard then holds a contiguous range of flat tiles and the kernel's
+    ``t = n_tile * k_tiles + k_tile`` order survives the shard split — else
+    1, because ``stacked_blocks`` would insert pad blocks that corrupt the
+    flat tile order (the PR 2 restriction, now per-leaf instead of
+    global)."""
+    t = MATMUL_TILE
+    blocks = (-(-k // t)) * (-(-n // t))
+    return shards if shards > 1 and blocks % shards == 0 else 1
 
 
 def _is_matmul_pos(pstr: str, ndim: int) -> bool:
@@ -181,9 +198,11 @@ def assign_weight_modes(params, *, mode: str = "fused",
     mode="stream": every eligible leaf becomes StreamedWeight; matmul
                    positions execute the canonical contraction on the
                    just-decompressed weight, the rest materialize.
-    mode="fused":  matmul positions become FusedWeight tile streams
-                   (``shards`` is forced to 1 — tile streams are not
-                   TP-shardable); other eligible leaves stream as above.
+    mode="fused":  matmul positions become FusedWeight tile streams,
+                   TP-sharded per leaf when the tile-block count allows it
+                   (:func:`fused_shards`; leaves whose count doesn't divide
+                   ``shards`` encode unsharded); other eligible leaves
+                   stream as above.
 
     The never-worse escape is intact in every mode: a leaf whose streams
     would not beat raw bytes falls back to DenseWeight (matmul positions,
@@ -201,8 +220,6 @@ def assign_weight_modes(params, *, mode: str = "fused",
     if mode not in WEIGHT_MODES:
         raise ValueError(f"unknown weight mode {mode!r}; "
                          f"expected one of {WEIGHT_MODES}")
-    if mode == "fused":
-        shards = 1
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=is_handle)
     out = [None] * len(flat)
@@ -224,10 +241,23 @@ def assign_weight_modes(params, *, mode: str = "fused",
             out[slot] = leaf
             continue
         job["slot"] = slot
+        job["shards"] = (fused_shards(job["k"], job["n"], shards)
+                         if job["kind"] == "fused" else shards)
         jobs.append(job)
     codec = codec or current_codec()
-    cts = codec.compress_stacked_many([j["arr"] for j in jobs],
-                                      p=shared_params, shards=shards)
+    # one batched encode per distinct shard width (fused leaves whose tile
+    # count doesn't divide `shards` drop to 1; everything else shares one
+    # O(#buckets) pass)
+    cts = [None] * len(jobs)
+    by_shards: dict = {}
+    for idx, j in enumerate(jobs):
+        by_shards.setdefault(j["shards"], []).append(idx)
+    for job_shards, idxs in sorted(by_shards.items()):
+        group = codec.compress_stacked_many(
+            [jobs[i]["arr"] for i in idxs], p=shared_params,
+            shards=job_shards)
+        for i, ct in zip(idxs, group):
+            cts[i] = ct
     for j, ct in zip(jobs, cts):
         out[j["slot"]] = build_serving_handle(j, ct)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -97,8 +97,14 @@ class StreamedWeight(WeightHandle):
                                    metadata=dict(static=True))
 
     def materialize(self, codec=None):
-        # moveaxis'd layout; the ambient codec decodes unless one is passed
-        w_perm = (codec or current_codec()).decompress_array(self.ct)
+        # moveaxis'd layout; the ambient codec decodes unless one is passed.
+        # Under an ambient serving mesh the stream shards are first gathered
+        # as compressed bytes (collectives.maybe_gather_ct), then ONE local
+        # decode runs on every device — the interconnect never carries the
+        # dense weight.
+        from repro.runtime.collectives import maybe_gather_ct
+        ct = maybe_gather_ct(self.ct, codec)
+        w_perm = (codec or current_codec()).decompress_array(ct)
         w = jnp.moveaxis(w_perm, 0, self.tp_axis)
         return w.astype(jnp.dtype(self.dtype_str))
 
@@ -120,11 +126,14 @@ class FusedWeight(WeightHandle):
 
     def matmul(self, x):
         from repro.kernels import ops  # lazy: keep module import light
-        return ops.decompress_matmul(x, self.ct, self.k, self.n)
+        from repro.runtime.collectives import maybe_gather_ct
+        return ops.decompress_matmul(x, maybe_gather_ct(self.ct),
+                                     self.k, self.n)
 
     def materialize(self, codec=None):
+        from repro.runtime.collectives import maybe_gather_ct
         w = (codec or current_codec()).untile_matmul_weight(
-            self.ct, self.k, self.n)
+            maybe_gather_ct(self.ct, codec), self.k, self.n)
         return w.astype(jnp.dtype(self.dtype_str))
 
 
@@ -211,8 +220,10 @@ def materialize_full(handle, codec=None):
     training tree from serving-layout records)."""
     if isinstance(handle, DenseWeight):
         return handle.w
+    from repro.runtime.collectives import maybe_gather_ct
     codec = codec or current_codec()
-    return finish_materialize(handle, codec.decompress_stacked(handle.ct))
+    return finish_materialize(
+        handle, codec.decompress_stacked(maybe_gather_ct(handle.ct, codec)))
 
 
 def materialize_full_many(handles, codec=None):
@@ -220,9 +231,11 @@ def materialize_full_many(handles, codec=None):
     decode dispatches — handles sharing a bucket decode in one concatenated
     dispatch via ``Codec.decompress_stacked_many`` (batched checkpoint
     restore, whole-tree materialization)."""
+    from repro.runtime.collectives import maybe_gather_ct
     codec = codec or current_codec()
     decs = codec.decompress_stacked_many(
-        [None if isinstance(h, DenseWeight) else h.ct for h in handles])
+        [None if isinstance(h, DenseWeight)
+         else maybe_gather_ct(h.ct, codec) for h in handles])
     return [h.w if isinstance(h, DenseWeight) else finish_materialize(h, d)
             for h, d in zip(handles, decs)]
 
