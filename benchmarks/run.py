@@ -29,6 +29,10 @@ Modules:
   bench_mesh        ISSUE 8    (sharded vs replicated restore, per-link
                                 ledger: collective traffic = compressed
                                 bytes only; needs a multi-device mesh)
+  bench_traffic     ISSUE 9    (Poisson load against the continuous-batching
+                                engine: served tok/s vs offered load,
+                                p50/p99 TTFT/TPOT, shed/evicted/rejected
+                                accounting, one-shot logit parity)
 """
 from __future__ import annotations
 
@@ -44,7 +48,7 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 
 SUITE_ORDER = ["ratio", "throughput", "blocksize", "ablation", "params",
                "transfer", "pipeline", "e2e", "serve", "overlap", "ckpt",
-               "faults", "mesh"]
+               "faults", "mesh", "traffic"]
 
 
 def _env_flag(name: str) -> bool:
@@ -104,12 +108,12 @@ def main(argv=None) -> None:
     from . import (bench_ablation, bench_blocksize, bench_ckpt, bench_e2e,
                    bench_faults, bench_mesh, bench_overlap, bench_params,
                    bench_pipeline, bench_ratio, bench_serve, bench_throughput,
-                   bench_transfer)
+                   bench_traffic, bench_transfer)
     by_suite = {_suite_name(m.__name__): m for m in
                 [bench_ratio, bench_throughput, bench_blocksize,
                  bench_ablation, bench_params, bench_transfer,
                  bench_pipeline, bench_e2e, bench_serve, bench_overlap,
-                 bench_ckpt, bench_faults, bench_mesh]}
+                 bench_ckpt, bench_faults, bench_mesh, bench_traffic]}
     wanted = [s.removeprefix("bench_") for s in args.suites] or SUITE_ORDER
     unknown = [s for s in wanted if s not in by_suite]
     if unknown:

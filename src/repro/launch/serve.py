@@ -1,5 +1,6 @@
-"""Production serving launcher: batched generation behind the weight-
-execution policy (paper §VI-C + the fused decode path of DESIGN.md §8).
+"""Production serving launcher: continuous-batching generation behind the
+weight-execution policy (paper §VI-C + the fused decode path of DESIGN.md
+§8), driven by the resilient engine of ``runtime/engine.py``.
 
 Modes (runtime/streaming.py, docs/SERVING.md):
   dense   raw weights, canonical tiled matmul executor (baseline)
@@ -9,6 +10,14 @@ Modes (runtime/streaming.py, docs/SERVING.md):
 
 All three produce bit-identical logits; they differ only in where weight
 bytes live and when they decompress.
+
+Serving (docs/TRAFFIC.md): every run goes through the continuous-batching
+engine — ``--batch N`` submits N requests into a bounded admission queue
+(``--queue-depth``), they join a ``--concurrency``-slot KV ring at token
+granularity, and ``--deadline-ms`` attaches a total per-request deadline
+(expired work is shed before prefill or evicted at step granularity).
+The one-shot path of earlier PRs is just an engine run whose requests all
+arrive at t=0; logits are bit-identical to the old loop.
 
 Checkpoints (docs/CHECKPOINT.md): ``--ckpt DIR`` restores weights through
 ``CheckpointManager.load_for_serving`` — compressed records flow disk->HBM
@@ -26,47 +35,33 @@ Reliability (docs/RELIABILITY.md): restores run with record quarantine and
 per-record fallback.  ``--degraded`` (default) serves with the fallback
 handles and prints the RestoreReport; ``--strict`` exits nonzero with the
 full quarantine list.  :data:`HEALTH` exposes the readiness state
-(initializing/restoring/ready/degraded/failed) for probes.
+(initializing/restoring/ready/degraded/draining/stopped/failed) for
+probes; it is an engine-owned, thread-safe
+:class:`repro.runtime.engine.ServerHealth` and is reset at every
+``main()`` entry so embedded back-to-back runs never inherit a stale
+state from an earlier exception.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.codec_api import Codec, use_codec
+from repro.core.codec_api import Codec
 from repro.models import build_model
+from repro.runtime.engine import Engine, EngineConfig, ServerHealth
 from repro.runtime.streaming import assign_weight_modes, mode_mix, \
     stream_stats
 
-
-@dataclasses.dataclass
-class ServerHealth:
-    """Readiness/health state of the serving process — the launcher's
-    answer to a load balancer's probe (docs/RELIABILITY.md).
-
-    States: ``initializing`` -> ``restoring`` -> ``ready`` | ``degraded``
-    (serving with fallback handles after a quarantined restore) |
-    ``failed`` (strict policy refused a damaged restore, or no restore
-    source at all — the process exits nonzero).
-    """
-    state: str = "initializing"
-    detail: str = ""
-
-    def ready(self) -> bool:
-        """Should a load balancer route traffic here?  Degraded serving
-        is still correct serving (logits are bit-identical across handle
-        modes) — it answers yes."""
-        return self.state in ("ready", "degraded")
-
-
 # module-level so smoke tests and embedding code can probe the last run's
-# health without threading it through main()
+# health without threading it through main().  The class lives in
+# runtime/engine.py now (engine-owned, thread-safe transitions); this
+# instance is the launcher's alias — main() resets it at entry and hands
+# it to the Engine, which owns every later transition.
 HEALTH = ServerHealth()
 
 
@@ -174,6 +169,18 @@ def main():
     ap.add_argument("--save-ckpt", default=None, metavar="DIR",
                     help="write an enec-v2 serving-layout checkpoint of "
                          "the initialized weights, then serve")
+    ap.add_argument("--concurrency", type=int, default=None,
+                    help="KV slot-ring size of the serving engine "
+                         "(docs/TRAFFIC.md): how many requests decode "
+                         "together; default = --batch")
+    ap.add_argument("--queue-depth", type=int, default=16,
+                    help="bounded admission queue depth; offers beyond it "
+                         "are rejected with queue_full (docs/TRAFFIC.md)")
+    ap.add_argument("--deadline-ms", type=float, default=0,
+                    help="total per-request deadline in ms (0 = none): "
+                         "expired queued work is shed before prefill, "
+                         "in-flight work past it is evicted at step "
+                         "granularity (docs/TRAFFIC.md)")
     pol = ap.add_mutually_exclusive_group()
     pol.add_argument("--strict", action="store_true",
                      help="refuse a damaged restore: exit nonzero with the "
@@ -190,7 +197,7 @@ def main():
                  "(restored weights are already checkpointed)")
     mode = "dense" if args.dense else (args.mode or "fused")
     policy = "strict" if args.strict else "degraded"
-    HEALTH.state, HEALTH.detail = "initializing", ""
+    HEALTH.reset()   # embedded back-to-back runs never inherit stale state
 
     mesh = None
     if args.mesh or args.tp > 1:
@@ -213,28 +220,29 @@ def main():
                   decode_backend=args.codec_backend)
     if args.ckpt:
         from repro.checkpoint.ckpt import CheckpointError
-        HEALTH.state = "restoring"
+        HEALTH.transition("restoring")
         try:
             params, report = _restore_params(args, model, mode, codec,
                                              policy, mesh=mesh)
         except (CheckpointError, FileNotFoundError) as e:
-            HEALTH.state, HEALTH.detail = "failed", str(e)
+            HEALTH.transition("failed", str(e))
             print(f"[launch.serve] restore FAILED: {e}")
             raise SystemExit(1)
         if report is not None and report.degraded:
             print("[launch.serve]", report.summary())
             if policy == "strict":
-                HEALTH.state = "failed"
-                HEALTH.detail = (f"{len(report.quarantined)} quarantined "
-                                 f"record(s) under --strict")
+                HEALTH.transition(
+                    "failed", f"{len(report.quarantined)} quarantined "
+                              f"record(s) under --strict")
                 print(f"[launch.serve] --strict: refusing to serve with "
                       f"{len(report.quarantined)} quarantined record(s); "
                       f"exiting nonzero")
                 raise SystemExit(1)
-            HEALTH.state = "degraded"
-            HEALTH.detail = f"{len(report.quarantined)} record(s) on fallback"
+            HEALTH.transition(
+                "degraded",
+                f"{len(report.quarantined)} record(s) on fallback")
         else:
-            HEALTH.state = "ready"
+            HEALTH.transition("ready")
     else:
         params = model.init(jax.random.key(0))
         params = assign_weight_modes(params, mode=mode,
@@ -257,65 +265,69 @@ def main():
             mgr.save(0, {"params": params}, blocking=True)
             print(f"[launch.serve] saved serving checkpoint to "
                   f"{args.save_ckpt} in {time.perf_counter() - t0:.2f}s")
-        HEALTH.state = "ready"
+        HEALTH.transition("ready")
     print(f"[launch.serve] health={HEALTH.state} ready={HEALTH.ready()} "
           f"policy={policy} mode_mix={mode_mix(params)}")
     print(f"[launch.serve] mode={mode} overlap={args.overlap}:",
           stream_stats(params))
 
-    max_len = args.prompt_len + args.tokens
-    prompts = jax.random.randint(jax.random.key(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, max_len))
-
-    # one jit'd decode step: model step + argmax sampling fused, KV cache
-    # donated — no per-step cache copy, no host round-trip for the token
-    donate = (1,) if jax.default_backend() != "cpu" else ()
-
-    @functools.partial(jax.jit, donate_argnums=donate)
-    def decode_step(p, cache, tok):
-        logits, cache = model.decode_fn(p, cache, tok)
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
-
-    # the jitted steps trace under this codec: streamed handles decode
-    # through ITS compile caches, not the process default's.  Under a
-    # serving mesh, every handle consumption point gathers its compressed
-    # shards first (collectives.maybe_gather_ct) — the ambient context is
-    # read at trace time
-    import contextlib
+    # ---- engine-driven serving (docs/TRAFFIC.md) -------------------------
+    # The Engine traces every jit dispatch under the launcher's codec (its
+    # compile caches, not the process default's) and, under a serving
+    # mesh, gathers compressed shards at each handle consumption point.
+    extra_ctx = None
     if mesh is not None:
         from repro.runtime.collectives import use_serving_mesh
-        mesh_ctx = use_serving_mesh(mesh)
+        extra_ctx = lambda: use_serving_mesh(mesh)   # noqa: E731
+    slots = args.concurrency if args.concurrency else args.batch
+    ecfg = EngineConfig(
+        max_slots=max(1, slots),
+        queue_depth=max(args.queue_depth, args.batch),
+        max_prompt_len=args.prompt_len,
+        max_new_tokens=args.tokens,
+        default_deadline_s=args.deadline_ms / 1e3 if args.deadline_ms
+        else None)
+    engine = Engine(model, params, ecfg, codec=codec, health=HEALTH,
+                    extra_context=extra_ctx)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size), np.int32)
+
+    t0 = time.perf_counter()
+    reqs = [engine.submit(prompts[i], args.tokens, name=f"seq{i}")
+            for i in range(args.batch)]
+    engine.run_until_idle()
+    wall = time.perf_counter() - t0
+
+    finished = [r for r in reqs if r.state in ("done", "timed_out")]
+    ttfts = [r.ttft_s() for r in finished if r.ttft_s() is not None]
+    ttft = sum(ttfts) / len(ttfts) if ttfts else 0.0
+    if args.tokens > 1:
+        tpots = [r.tpot_s() for r in finished if r.tpot_s() is not None]
+        tpot = sum(tpots) / len(tpots) if tpots else 0.0
+        n_tok = sum(len(r.tokens) for r in finished)
+        print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
+              f"TPOT={tpot*1e3:.1f}ms tok/s={n_tok / wall:.1f} mode={mode}")
     else:
-        mesh_ctx = contextlib.nullcontext()
-    with use_codec(codec), mesh_ctx:
-        t0 = time.perf_counter()
-        logits, cache = prefill(params, {"tokens": prompts})
-        logits.block_until_ready()
-        ttft = time.perf_counter() - t0
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        toks = [tok]
-        if args.tokens > 1:
-            t0 = time.perf_counter()
-            for _ in range(args.tokens - 1):
-                tok, cache = decode_step(params, cache, tok)
-                toks.append(tok)
-            jax.block_until_ready(tok)
-            dt = time.perf_counter() - t0
-            steps = args.tokens - 1
-            tpot = dt / steps
-            tok_s = args.batch * steps / dt
-            print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
-                  f"TPOT={tpot*1e3:.1f}ms tok/s={tok_s:.1f} mode={mode}")
-        else:
-            # a single token never enters the decode loop — timing it would
-            # divide by ~0 and print inf/garbage tok/s, so report TTFT only
-            print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
-                  f"(prefill only; --tokens 1 has no decode steps) "
-                  f"mode={mode}")
+        # a single token never enters the decode loop — timing it would
+        # divide by ~0 and print inf/garbage tok/s, so report TTFT only
+        print(f"[launch.serve] batch={args.batch} TTFT={ttft*1e3:.1f}ms "
+              f"(prefill only; --tokens 1 has no decode steps) "
+              f"mode={mode}")
+    st = engine.stats()["engine"]
+    evicted = (st["evicted_deadline"] + st["evicted_fault"]
+               + st["evicted_abort"])
+    print(f"[launch.serve] engine: slots={ecfg.max_slots} "
+          f"steps={st['steps']} prefills={st['prefills']} "
+          f"buckets={st['compiled_buckets']} done={st['done']} "
+          f"timed_out={st['timed_out']} shed={st['shed']} "
+          f"evicted={evicted} rejected={st['rejected']} "
+          f"governor={engine.governor.state}")
     print(_link_line("serve", codec))
-    print("[launch.serve] seq0:", jnp.stack(toks, 1)[0].tolist())
+    if reqs and reqs[0].tokens:
+        print("[launch.serve] seq0:", list(reqs[0].tokens))
+    engine.shutdown(deadline_s=30.0)
+    print(f"[launch.serve] health={HEALTH.state} ({HEALTH.detail})")
 
 
 if __name__ == "__main__":

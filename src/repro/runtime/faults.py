@@ -17,6 +17,11 @@ enec-v2 container is designed to survive —
   decode    the checkpoint loader's decode dispatch fails for a matching
             record name (models a kernel/runtime failure after the bytes
             arrived intact)
+  step      a serving-engine scheduler step fails for a matching request
+            key (``runtime/engine.py`` probes every active request before
+            each prefill/decode step; a transient step fault is absorbed
+            by the engine's RetryPolicy, a permanent one evicts only the
+            poisoned request while the rest of the batch continues)
 
 Faults activate through a contextvar (``inject(...)`` contextmanager — the
 test-local route) or through the ``ENEC_FAULTS`` environment variable (a
@@ -48,7 +53,14 @@ class InjectedFault(OSError):
     failures identically."""
 
 
-FAULT_KINDS = ("read", "write", "corrupt", "decode")
+class FaultConfigError(ValueError):
+    """The ``ENEC_FAULTS`` environment variable (or an explicit spec) is
+    malformed.  Raised eagerly with a one-line message naming the env var
+    so a typo'd CI fault schedule fails at the first injection point, not
+    as a raw JSON/TypeError traceback deep inside a checkpoint read."""
+
+
+FAULT_KINDS = ("read", "write", "corrupt", "decode", "step")
 CORRUPT_MODES = ("flip", "truncate")
 
 
@@ -122,6 +134,10 @@ class FaultInjector:
         if self._take("decode", name) is not None:
             raise InjectedFault(f"injected decode fault: {name}")
 
+    def check_step(self, key) -> None:
+        if self._take("step", key) is not None:
+            raise InjectedFault(f"injected step fault: {key}")
+
     def corrupt(self, path, data: bytes) -> bytes:
         """Apply a matching ``corrupt`` spec to bytes just read from
         ``path`` — flip one byte or truncate, leaving detection to the
@@ -149,10 +165,36 @@ _ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
 _ENV_CACHE: tuple = (None, None)   # (raw env string, parsed injector)
 
 
+def _parse_env_schedule(raw: str) -> FaultInjector:
+    """Parse ``ENEC_FAULTS`` into a :class:`FaultInjector`, converting every
+    malformed-input failure (bad JSON, wrong container shape, unknown fault
+    ``kind``/``mode``, bogus field types) into a one-line
+    :class:`FaultConfigError` that names the env var."""
+    try:
+        data = json.loads(raw)
+    except json.JSONDecodeError as e:
+        raise FaultConfigError(
+            f"ENEC_FAULTS is not valid JSON: {e}") from None
+    if isinstance(data, list):
+        data = {"specs": data}
+    if not isinstance(data, dict):
+        raise FaultConfigError(
+            f"ENEC_FAULTS must be a JSON list of fault specs or an object "
+            f"with a 'specs' key, got {type(data).__name__}")
+    try:
+        return FaultInjector(data.get("specs", []),
+                             seed=int(data.get("seed", 0)))
+    except (TypeError, ValueError) as e:
+        raise FaultConfigError(f"ENEC_FAULTS has a bad fault spec: {e}") \
+            from None
+
+
 def active() -> Optional[FaultInjector]:
     """The injector in effect, if any: the ``inject()`` contextvar wins,
     else ``ENEC_FAULTS`` (JSON: a spec list, or ``{"seed": .., "specs":
-    [..]}``), else None."""
+    [..]}``), else None.  A malformed env schedule raises
+    :class:`FaultConfigError` at the first injection point instead of a
+    raw traceback from deep inside a checkpoint read."""
     inj = _ACTIVE.get()
     if inj is not None:
         return inj
@@ -161,11 +203,7 @@ def active() -> Optional[FaultInjector]:
         return None
     global _ENV_CACHE
     if _ENV_CACHE[0] != raw:
-        data = json.loads(raw)
-        if isinstance(data, list):
-            data = {"specs": data}
-        _ENV_CACHE = (raw, FaultInjector(data.get("specs", []),
-                                         seed=int(data.get("seed", 0))))
+        _ENV_CACHE = (raw, _parse_env_schedule(raw))
     return _ENV_CACHE[1]
 
 
@@ -229,6 +267,16 @@ def check_decode(name) -> None:
     inj = active()
     if inj is not None:
         inj.check_decode(name)
+
+
+def check_step(key) -> None:
+    """Raise the active serving-step fault for request ``key``, if any
+    (called by the engine's scheduler before each prefill/decode step for
+    every active request, so a fault can poison one request without
+    touching the rest of the batch)."""
+    inj = active()
+    if inj is not None:
+        inj.check_step(key)
 
 
 # ---------------------------------------------------------------------------

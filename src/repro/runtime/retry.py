@@ -33,6 +33,14 @@ class RetryPolicy:
     to ``max_delay_s``; each sleep is scaled by ``1 + jitter * U[0, 1)``
     drawn from the instance's seeded RNG (desynchronizes a fleet retrying
     against one storage system without losing reproducibility).
+
+    ``max_elapsed_s`` bounds the TOTAL time a call may spend inside
+    ``call()`` (tries + backoff sleeps): once the budget would be exceeded
+    by the next backoff, the call gives up immediately and re-raises —
+    this is how serving-engine retries respect per-request deadlines
+    (runtime/engine.py passes the request's remaining budget per call).
+    ``sleep``/``clock`` are injectable so tests never real-sleep through a
+    backoff schedule and can drive the elapsed budget from a fake clock.
     """
     max_attempts: int = 4
     base_delay_s: float = 0.002
@@ -40,6 +48,9 @@ class RetryPolicy:
     jitter: float = 0.5
     seed: int = 0
     retry_on: Tuple[Type[BaseException], ...] = (OSError,)
+    max_elapsed_s: float = None   # None = unbounded (attempt-bounded only)
+    sleep: Callable = time.sleep
+    clock: Callable = time.monotonic
 
     def __post_init__(self):
         if self.max_attempts < 1:
@@ -56,12 +67,22 @@ class RetryPolicy:
                    self.max_delay_s)
         return base * (1.0 + self.jitter * self._rng.random())
 
-    def call(self, fn: Callable, *, describe: str = "io"):
+    def call(self, fn: Callable, *, describe: str = "io",
+             max_elapsed_s: float = None):
         """Run ``fn()`` under this policy.  Exceptions in ``retry_on``
         retry up to ``max_attempts`` total tries; the final failure (and
         any non-retryable exception) propagates to the caller, which
-        decides between abort and quarantine."""
+        decides between abort and quarantine.
+
+        ``max_elapsed_s`` overrides the instance budget for this call
+        (the tighter of the two applies): when the elapsed time plus the
+        next backoff sleep would exceed it, the call gives up NOW rather
+        than sleeping through a deadline the caller already missed."""
         self._stats["calls"] += 1
+        budgets = [b for b in (self.max_elapsed_s, max_elapsed_s)
+                   if b is not None]
+        budget = min(budgets) if budgets else None
+        t0 = self.clock() if budget is not None else None
         attempt = 0
         while True:
             attempt += 1
@@ -72,8 +93,13 @@ class RetryPolicy:
                 if attempt >= self.max_attempts:
                     self._stats["gave_up"] += 1
                     raise
+                delay = self.backoff_s(attempt)
+                if budget is not None and \
+                        (self.clock() - t0) + delay > budget:
+                    self._stats["gave_up"] += 1
+                    raise
                 self._stats["retries"] += 1
-                time.sleep(self.backoff_s(attempt))
+                self.sleep(delay)
 
     def stats(self) -> dict:
         """Exact counters: calls entered, attempts made, retries slept

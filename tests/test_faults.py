@@ -13,7 +13,8 @@ import pytest
 from repro.checkpoint.ckpt import CheckpointError, CheckpointManager
 from repro.core import Codec
 from repro.runtime import faults as rt_faults
-from repro.runtime.faults import FaultInjector, FaultSpec, InjectedFault
+from repro.runtime.faults import (FaultConfigError, FaultInjector, FaultSpec,
+                                  InjectedFault)
 from repro.runtime.retry import RetryPolicy
 from conftest import make_realistic_bf16
 
@@ -93,6 +94,38 @@ def test_env_hook_parses_enec_faults(monkeypatch):
     assert rt_faults.active() is None
 
 
+@pytest.mark.parametrize("raw,match", [
+    ("{not json", "not valid JSON"),
+    ('"a string"', "must be a JSON list"),
+    ("42", "must be a JSON list"),
+    ('[{"kind": "explode"}]', "bad fault spec"),
+    ('[{"kind": "read", "bogus_field": 1}]', "bad fault spec"),
+])
+def test_malformed_env_schedule_fails_fast_naming_env_var(monkeypatch,
+                                                          raw, match):
+    """A typo'd ENEC_FAULTS must die at the first injection point with a
+    one-line FaultConfigError that names the env var — never a raw
+    JSON/TypeError traceback from deep inside a checkpoint read."""
+    monkeypatch.setenv("ENEC_FAULTS", raw)
+    with pytest.raises(FaultConfigError, match="ENEC_FAULTS") as ei:
+        rt_faults.active()
+    assert match in str(ei.value)
+    # the read funnel surfaces the same one-liner
+    with pytest.raises(FaultConfigError, match="ENEC_FAULTS"):
+        rt_faults.read_file(__file__)
+    monkeypatch.delenv("ENEC_FAULTS")
+    assert rt_faults.active() is None
+
+
+def test_step_fault_kind_matches_request_keys():
+    inj = FaultInjector([FaultSpec(kind="step", match="req-7", times=1)])
+    inj.check_step("req-3")              # no match
+    with pytest.raises(InjectedFault, match="req-7"):
+        inj.check_step("req-7")
+    inj.check_step("req-7")              # exhausted
+    assert inj.stats()[0]["fired"] == 1
+
+
 def test_retry_policy_absorbs_transient_and_counts():
     pol = RetryPolicy(base_delay_s=0.0001, max_delay_s=0.001, seed=1)
     state = {"n": 0}
@@ -122,6 +155,68 @@ def test_retry_policy_gives_up_on_permanent():
     with pytest.raises(ValueError):
         pol.call(lambda: (_ for _ in ()).throw(ValueError("not io")))
     assert pol.stats()["attempts"] == 4
+
+
+def _budget_policy(**kw):
+    """Policy on a fake clock: sleeps advance time, nothing real-sleeps."""
+    state = {"t": 0.0, "slept": []}
+
+    def sleep(s):
+        state["slept"].append(s)
+        state["t"] += s
+
+    kw.setdefault("base_delay_s", 1.0)
+    kw.setdefault("max_delay_s", 1.0)
+    kw.setdefault("jitter", 0.0)
+    pol = RetryPolicy(sleep=sleep, clock=lambda: state["t"], **kw)
+    return pol, state
+
+
+def test_retry_total_elapsed_budget_gives_up_before_sleeping():
+    """max_elapsed_s bounds tries + backoff: the policy re-raises instead
+    of sleeping through a deadline the caller has already missed."""
+    pol, state = _budget_policy(max_attempts=10, max_elapsed_s=2.5)
+
+    def dead():
+        raise OSError("permanent")
+
+    with pytest.raises(OSError, match="permanent"):
+        pol.call(dead)
+    # 1s + 1s sleeps fit the 2.5s budget; the third would overrun it
+    assert state["slept"] == [1.0, 1.0]
+    st = pol.stats()
+    assert st["attempts"] == 3 and st["gave_up"] == 1
+
+
+def test_retry_per_call_budget_tightens_instance_budget():
+    pol, state = _budget_policy(max_attempts=10, max_elapsed_s=100.0)
+
+    def dead():
+        raise OSError("nope")
+
+    with pytest.raises(OSError):
+        pol.call(dead, max_elapsed_s=0.5)    # tighter per-call budget wins
+    assert state["slept"] == []              # gave up before ANY sleep
+    assert pol.stats()["attempts"] == 1
+    # the instance budget still applies when the call passes none
+    with pytest.raises(OSError):
+        pol.call(dead)
+    assert len(state["slept"]) == 9          # attempt-bounded, budget roomy
+
+
+def test_retry_budget_still_allows_success_within_window():
+    pol, state = _budget_policy(max_attempts=5, max_elapsed_s=10.0)
+    n = {"v": 0}
+
+    def flaky():
+        n["v"] += 1
+        if n["v"] <= 2:
+            raise OSError("transient")
+        return "ok"
+
+    assert pol.call(flaky) == "ok"
+    assert state["slept"] == [1.0, 1.0]
+    assert pol.stats()["gave_up"] == 0
 
 
 def test_backoff_grows_and_is_jittered_deterministically():
