@@ -1,0 +1,173 @@
+"""ISSUE 10: MoE expert streaming — tok/s and TPOT vs expert-cache budget.
+
+Serves the smallest MoE config (phi3_5_moe) with the expert stacks held as
+per-expert compressed records behind the byte-budgeted LRU decode cache
+(``runtime/experts.py``) and measures decode-step latency at cache budgets
+of 0% / 25% / 100% of the fully-resident expert bytes, against the dense
+baseline.  Derived keys carry the acceptance gates:
+
+  parity_mismatches  bitwise logit mismatches vs dense (must be 0 at ANY
+                     budget — the cache changes cost, never bits)
+  dispatch_ok        every routing step's misses decoded in at most
+                     #plan-buckets vectorized dispatches (the O(#buckets)
+                     contract of ``host_decode.decode_many``)
+
+A second section drives ``ExpertStore.fetch_step`` directly with synthetic
+skewed (zipf) vs uniform routing to trace hit-rate curves against the
+budget fraction — the cache-sizing signal ``docs/MOE.md`` documents.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import host_decode
+from repro.models import build_model
+from repro.runtime.experts import install_expert_store
+from repro.runtime.streaming import assign_weight_modes
+
+
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "").strip().lower() \
+        not in ("", "0", "false", "no", "off")
+
+
+def _serve_timed(model, tree, pb, max_len, n_steps):
+    """Prefill + n_steps greedy decode; returns (prefill_logits,
+    first_decode_logits, per-step seconds)."""
+    t0 = time.perf_counter()
+    logits, cache = model.prefill_fn(tree, pb, max_len)
+    jax.block_until_ready(logits)
+    ttft = time.perf_counter() - t0
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    first = None
+    steps = []
+    for _ in range(n_steps):
+        t0 = time.perf_counter()
+        dec, cache = model.decode_fn(tree, cache, tok)
+        jax.block_until_ready(dec)
+        steps.append(time.perf_counter() - t0)
+        if first is None:
+            first = np.asarray(dec)
+        tok = jnp.argmax(dec, -1).astype(jnp.int32)
+    return np.asarray(logits), first, ttft, steps
+
+
+def _mismatches(ref, got):
+    return sum(int(np.sum(r.view(np.uint32) != g.view(np.uint32)))
+               for r, g in zip(ref, got))
+
+
+def _plan_buckets(store):
+    """Distinct decode-bucket keys across the store's records — the bound
+    a single fetch's dispatch count must stay under."""
+    keys = set()
+    for name in store.names():
+        rec = host_decode.parse_record(store._records[(name, 0, 0)])
+        p = rec.params
+        keys.add((rec.fmt_name, (p.n, p.m, p.L), rec.block_elems))
+    return len(keys)
+
+
+def _routing_hit_rates(params, frac_budgets, *, skew, steps, seed):
+    """Drive fetch_step directly with synthetic routing (k=2 of E per
+    step, zipf-skewed or uniform) and return hit rates per budget."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for frac in frac_budgets:
+        _, store = install_expert_store(params)
+        store.budget_bytes = int(frac * store.total_expert_bytes())
+        names = store.names()
+        m = store.meta(names[0])
+        e, n_layers = m["n_experts"], m["n_layers"]
+        if skew == "zipf":
+            p = 1.0 / np.arange(1, e + 1) ** 1.5
+        else:
+            p = np.ones(e)
+        p = p / p.sum()
+        for i in range(steps):
+            routed = rng.choice(e, size=min(2, e), replace=False, p=p)
+            store.fetch_step(names, i % n_layers, routed)
+        st = store.stats()
+        out[frac] = st["hits"] / max(1, st["hits"] + st["misses"])
+    return out
+
+
+def run():
+    rows = []
+    smoke = _smoke()
+    n_steps = 6 if smoke else 16
+    sim_steps = 40 if smoke else 200
+    cfg = dataclasses.replace(get_smoke_config("phi3_5_moe_42b_a6_6b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch, prompt_len = 2, 8
+    max_len = prompt_len + n_steps + 2
+    pb = {"tokens": jax.random.randint(jax.random.key(1),
+                                       (batch, prompt_len), 0,
+                                       cfg.vocab_size)}
+
+    ref_pre, ref_dec, ttft, steps = _serve_timed(model, params, pb,
+                                                 max_len, n_steps)
+    tpot = float(np.median(steps))
+    rows.append((f"moe/dense/bs{batch}", tpot * 1e6,
+                 f"ttft_s={ttft:.4f};tpot_s={tpot:.4f};"
+                 f"p50_tpot_s={np.percentile(steps, 50):.4f};"
+                 f"p99_tpot_s={np.percentile(steps, 99):.4f};"
+                 f"tok_s={batch / tpot:.1f}"))
+
+    _, probe = install_expert_store(params)
+    total = probe.total_expert_bytes()
+    plan_buckets = _plan_buckets(probe)
+    # 0.75 sits between one layer's working set and full residency: the
+    # LRU both hits and evicts every step (the constrained-budget row)
+    for frac in (0.0, 0.25, 0.75, 1.0):
+        tree, store = install_expert_store(
+            params, budget_bytes=int(frac * total))
+        tree = assign_weight_modes(tree, mode="stream", min_bytes=1024)
+        pre, dec, ttft, steps = _serve_timed(model, tree, pb, max_len,
+                                             n_steps)
+        tpot = float(np.median(steps))
+        st = store.stats()
+        bad = _mismatches((ref_pre, ref_dec), (pre, dec))
+        hit_rate = st["hits"] / max(1, st["hits"] + st["misses"])
+        # O(#buckets) dispatch contract: across the whole serve, the
+        # batched fetches may not exceed plan_buckets dispatches each
+        dispatch_ok = st["fetch_buckets"] <= st["fetches"] * plan_buckets
+        rows.append((
+            f"moe/cache{int(frac * 100)}/bs{batch}", tpot * 1e6,
+            f"ttft_s={ttft:.4f};tpot_s={tpot:.4f};"
+            f"p50_tpot_s={np.percentile(steps, 50):.4f};"
+            f"p99_tpot_s={np.percentile(steps, 99):.4f};"
+            f"tok_s={batch / tpot:.1f};"
+            f"budget_bytes={store.budget_bytes};"
+            f"hit_rate={hit_rate:.3f};hits={st['hits']};"
+            f"misses={st['misses']};evictions={st['evictions']};"
+            f"fetches={st['fetches']};buckets={st['fetch_buckets']};"
+            f"plan_buckets={plan_buckets};"
+            f"miss_decode_s={st['decode_s']:.4f};"
+            f"parity_mismatches={bad};dispatch_ok={dispatch_ok}"))
+        if bad:
+            raise AssertionError(
+                f"expert-cache serve at budget {frac:.0%} diverged from "
+                f"dense: {bad} logit mismatches")
+        if not dispatch_ok:
+            raise AssertionError(
+                f"fetch dispatches exceeded the bucket bound: "
+                f"{st['fetch_buckets']} > {st['fetches']} * {plan_buckets}")
+
+    for skew in ("uniform", "zipf"):
+        rates = _routing_hit_rates(params, (0.25, 0.5, 1.0), skew=skew,
+                                   steps=sim_steps, seed=7)
+        derived = ";".join(f"hit_rate@{int(f * 100)}pct={r:.3f}"
+                           for f, r in sorted(rates.items()))
+        rows.append((f"moe/routing/{skew}", 0.0,
+                     f"steps={sim_steps};{derived}"))
+    return rows

@@ -33,6 +33,10 @@ Modules:
                                 engine: served tok/s vs offered load,
                                 p50/p99 TTFT/TPOT, shed/evicted/rejected
                                 accounting, one-shot logit parity)
+  bench_moe         ISSUE 10   (expert streaming: tok/s + p50/p99 TPOT vs
+                                expert-cache budget 0/25/100%, hit-rate
+                                curves skewed vs uniform routing, logit
+                                parity + dispatch-bound gates)
 """
 from __future__ import annotations
 
@@ -48,7 +52,7 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 
 SUITE_ORDER = ["ratio", "throughput", "blocksize", "ablation", "params",
                "transfer", "pipeline", "e2e", "serve", "overlap", "ckpt",
-               "faults", "mesh", "traffic"]
+               "faults", "mesh", "traffic", "moe"]
 
 
 def _env_flag(name: str) -> bool:
@@ -104,16 +108,25 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if args.smoke:
         os.environ["BENCH_SMOKE"] = "1"
+        # every suite is expected to have a committed baseline at the repo
+        # root for cross-PR comparison; flag the ones that don't so a new
+        # suite can't silently ship without one
+        missing = [s for s in SUITE_ORDER
+                   if not (REPO_ROOT / f"BENCH_{s}.json").exists()]
+        if missing:
+            print(f"[benchmarks.run] suites missing a committed baseline "
+                  f"at {REPO_ROOT}: {' '.join(missing)}", file=sys.stderr)
 
     from . import (bench_ablation, bench_blocksize, bench_ckpt, bench_e2e,
-                   bench_faults, bench_mesh, bench_overlap, bench_params,
-                   bench_pipeline, bench_ratio, bench_serve, bench_throughput,
-                   bench_traffic, bench_transfer)
+                   bench_faults, bench_mesh, bench_moe, bench_overlap,
+                   bench_params, bench_pipeline, bench_ratio, bench_serve,
+                   bench_throughput, bench_traffic, bench_transfer)
     by_suite = {_suite_name(m.__name__): m for m in
                 [bench_ratio, bench_throughput, bench_blocksize,
                  bench_ablation, bench_params, bench_transfer,
                  bench_pipeline, bench_e2e, bench_serve, bench_overlap,
-                 bench_ckpt, bench_faults, bench_mesh, bench_traffic]}
+                 bench_ckpt, bench_faults, bench_mesh, bench_traffic,
+                 bench_moe]}
     wanted = [s.removeprefix("bench_") for s in args.suites] or SUITE_ORDER
     unknown = [s for s in wanted if s not in by_suite]
     if unknown:

@@ -1,0 +1,101 @@
+"""MoE serving with compressed expert streaming + an LRU decode cache.
+
+Expert stacks never sit dense in memory: each expert is a per-expert
+compressed wire record in an ``ExpertStore``, and a routing step
+materializes only the experts it routed to, through a byte-budgeted LRU
+of decoded experts (docs/MOE.md).  The budget is deliberately constrained
+here so the cache both hits AND evicts — and the logits stay bit-identical
+to dense serving at any budget, because ENEC is lossless and unrouted
+slots are masked to exact zeros.
+
+    PYTHONPATH=src python examples/serve_moe_streaming.py --tokens 8
+"""
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.runtime.experts import install_expert_store
+from repro.runtime.streaming import assign_weight_modes, mode_mix
+
+
+def _serve(model, tree, pb, max_len, n_tokens):
+    logits, cache = model.prefill_fn(tree, pb, max_len)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    outs = [np.asarray(logits)]
+    gen = [tok]
+    t0 = time.perf_counter()
+    for _ in range(n_tokens - 1):
+        dec, cache = model.decode_fn(tree, cache, tok)
+        tok = jnp.argmax(dec, -1).astype(jnp.int32)
+        outs.append(np.asarray(dec))
+        gen.append(tok)
+    jax.block_until_ready(tok)
+    tpot = (time.perf_counter() - t0) / max(n_tokens - 1, 1)
+    return outs, jnp.stack(gen, axis=1), tpot
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--budget-frac", type=float, default=0.75,
+                    help="expert-cache budget as a fraction of the fully-"
+                         "resident expert bytes (0.75 sits between one "
+                         "layer's working set and full residency, so the "
+                         "LRU both hits and evicts)")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_smoke_config("phi3_5_moe_42b_a6_6b"),
+                              scan_layers=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    pb = {"tokens": jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size)}
+    max_len = args.prompt_len + args.tokens + 2
+
+    # dense reference first: the streamed serve must reproduce these bits
+    ref, ref_gen, _ = _serve(model, params, pb, max_len, args.tokens)
+
+    tree, store = install_expert_store(params)
+    store.budget_bytes = int(args.budget_frac * store.total_expert_bytes())
+    tree = assign_weight_modes(tree, mode="stream", min_bytes=1024)
+    print(f"[moe] {store.stats()['records']} expert records, "
+          f"{store.total_expert_bytes() / 1e3:.0f} KB dense-equivalent, "
+          f"budget {store.budget_bytes / 1e3:.0f} KB "
+          f"({args.budget_frac:.0%}); mode_mix={mode_mix(tree)}")
+
+    got, gen, tpot = _serve(model, tree, pb, max_len, args.tokens)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(r).view(np.uint32),
+                                      np.asarray(g).view(np.uint32))
+    assert (np.asarray(gen) == np.asarray(ref_gen)).all()
+
+    st = store.stats()
+    hit_rate = st["hits"] / max(1, st["hits"] + st["misses"])
+    print(f"[moe] experts: hits={st['hits']} misses={st['misses']} "
+          f"evictions={st['evictions']} hit_rate={hit_rate:.2f} "
+          f"fetches={st['fetches']} buckets={st['fetch_buckets']} "
+          f"resident={st['resident_bytes'] / 1e3:.0f} KB")
+    print(f"[moe] TPOT={tpot * 1e3:.1f} ms/token; miss-decode total "
+          f"{st['decode_s'] * 1e3:.1f} ms")
+    if st["evictions"] == 0 or st["hits"] == 0:
+        raise SystemExit("budget did not constrain the cache "
+                         f"(hits={st['hits']} evictions={st['evictions']})")
+    print("[moe] generated token ids (first sequence):", gen[0].tolist())
+    print("[moe] streamed-expert outputs verified bit-identical to dense")
+
+
+if __name__ == "__main__":
+    main()

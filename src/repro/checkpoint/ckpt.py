@@ -69,6 +69,7 @@ import numpy as np
 from repro.core import wire as enec_wire
 from repro.core.api import SUPPORTED_FLOAT_DTYPES, slice_stacked
 from repro.core.codec_api import Codec, current_codec
+from repro.runtime import experts as rt_experts
 from repro.runtime import faults as rt_faults
 from repro.runtime import streaming as rt_streaming
 from repro.runtime.retry import RetryPolicy
@@ -91,6 +92,18 @@ class CheckpointError(RuntimeError):
 
 
 RESTORE_POLICIES = ("strict", "degraded")
+
+
+@dataclasses.dataclass
+class _ExpertPart:
+    """One per-expert record queued for the batched decode of a training
+    ``load()``: its manifest handle spec (parent / layer / expert grid
+    coordinates) plus the device-resident compressed tensor.  The decode
+    pass reassembles every part of a parent into the dense ``(L, E, ...)``
+    stack — still O(#buckets) dispatches, since all parts of a leaf share
+    one searched param set and therefore one decoder bucket."""
+    spec: dict
+    ct: object
 
 
 @dataclasses.dataclass
@@ -168,6 +181,11 @@ class CheckpointManager:
     serving_layout: Optional[str] = None   # None | "stream" | "fused"
     serving_min_bytes: int = rt_streaming.MIN_STREAM_BYTES
     serving_shards: int = 1
+    # serving_layout extension: save (L, E, ...) MoE expert stacks as
+    # PER-EXPERT wire records so load_for_serving can restore them into an
+    # ExpertStore without inflating cold experts (docs/MOE.md).  Opt-in:
+    # trees that never install an expert store keep monolithic records.
+    expert_records: bool = False
     codec: Optional[Codec] = None          # default: ambient codec at init
     retry: Optional[RetryPolicy] = None    # default: RetryPolicy()
     _thread: Optional[threading.Thread] = None
@@ -178,6 +196,7 @@ class CheckpointManager:
         self.root.mkdir(parents=True, exist_ok=True)
         self.last_decode_plan = None   # DecodePlan of the latest load
         self.last_restore_report = None   # RestoreReport of the latest load
+        self.last_expert_store = None  # ExpertStore of the latest serving load
         if self.retry is None:
             # one policy per manager: its attempt counters aggregate every
             # pack/manifest read and pack write this manager performs
@@ -234,12 +253,19 @@ class CheckpointManager:
              ("np",  host_array)            raw host bytes (non-float)
              ("ct",  CompressedTensor)      plain enec/raw/const record
              ("hct", ct, spec, raw_bytes)   stacked serving-layout record
+             ("xct", meta, records)         per-expert record group (MoE)
         """
         payload: list = [None] * len(leaves)
         float_slots, other_slots, serve_jobs = [], [], []
         dense_specs: dict = {}   # slot -> handle spec for fallback leaves
         for i, (name, leaf) in enumerate(zip(names, leaves)):
             if is_handle(leaf):
+                if isinstance(leaf, rt_experts.ExpertRef):
+                    # the store already holds the exact per-expert wire
+                    # bodies — re-emit them verbatim, no re-encode
+                    payload[i] = ("xct", leaf.store.meta(leaf.name),
+                                  leaf.store.records_for(leaf.name))
+                    continue
                 if isinstance(leaf, DenseWeight):
                     leaf = leaf.w       # stored dense; re-wrapped on restore
                     dense_specs[i] = {"kind": "dense"}
@@ -259,6 +285,17 @@ class CheckpointManager:
                 continue
             if self.serving_layout is not None and i not in dense_specs \
                     and name.split("/", 1)[0] not in _NON_SERVING_ROOTS:
+                if (self.expert_records
+                        and rt_experts.is_expert_leaf(name, leaf)
+                        and _leaf_nbytes(leaf.shape, str(jnp.dtype(
+                            leaf.dtype))) >= self.serving_min_bytes):
+                    enc = rt_experts.encode_expert_leaf(
+                        name, jnp.asarray(leaf), self.codec)
+                    if enc is not None:
+                        meta, records = enc
+                        payload[i] = ("xct", meta, records)
+                        continue
+                    # escape (const / incompressible): monolithic record
                 # (slots unwrapped from a DenseWeight stay dense records —
                 # the policy that built the tree already decided against
                 # compressing them)
@@ -333,8 +370,28 @@ class CheckpointManager:
     # -- record building / pack writing ----------------------------------
 
     def _build_record(self, index, name, item, dense_specs):
-        """(manifest entry sans pack/offset, framed blob bytes)."""
+        """List of (manifest entry sans pack/offset, framed blob, raw
+        bytes) — one element for ordinary leaves, one PER EXPERT for an
+        ``xct`` record group."""
         tag = item[0]
+        if tag == "xct":
+            _, meta, records = item
+            eshape = [int(s) for s in meta["expert_shape"]]
+            per_raw = _leaf_nbytes(eshape, meta["dtype"])
+            out = []
+            for l, j, body in records:
+                entry = {"name": f"{name}::x{l:04d}.{j:04d}",
+                         "index": index, "shape": eshape,
+                         "dtype": meta["dtype"], "mode": "enec",
+                         "handle": {"kind": "expert", "parent": name,
+                                    "layer": int(l), "expert": int(j),
+                                    "n_layers": int(meta["n_layers"]),
+                                    "n_experts": int(meta["n_experts"]),
+                                    "expert_shape": eshape,
+                                    "dtype": meta["dtype"]},
+                         "bytes": len(body)}
+                out.append((entry, enec_wire.frame(body), per_raw))
+            return out
         if tag == "np":
             leaf = item[1]
             entry = {"name": name, "index": index, "shape": list(leaf.shape),
@@ -361,7 +418,7 @@ class CheckpointManager:
         if spec is not None and "handle" not in entry:
             entry["handle"] = spec
         entry["bytes"] = len(blob)
-        return entry, enec_wire.frame(blob), raw
+        return [(entry, enec_wire.frame(blob), raw)]
 
     def _save_host(self, step: int, names, payload, dense_specs) -> None:
         t0 = time.time()
@@ -395,27 +452,27 @@ class CheckpointManager:
         def drain_one():
             nonlocal raw_total, comp_total
             i, fut = pending.popleft()
-            entry, framed, raw = fut.result()
             pack = i % n_packs
-            entry["pack"] = pack
-            entry["offset"] = offsets[pack]
-            entry["length"] = len(framed)
+            for entry, framed, raw in fut.result():
+                entry["pack"] = pack
+                entry["offset"] = offsets[pack]
+                entry["length"] = len(framed)
 
-            def write_framed(f=files[pack], pos=offsets[pack],
-                             name=manifest["packs"][pack]):
-                # seek back to the record's committed offset on every
-                # attempt, so a retried write after a partial one lays the
-                # frame down exactly once
-                rt_faults.check_write(name)
-                f.seek(pos)
-                f.write(framed)
+                def write_framed(f=files[pack], pos=offsets[pack],
+                                 fr=framed, name=manifest["packs"][pack]):
+                    # seek back to the record's committed offset on every
+                    # attempt, so a retried write after a partial one lays
+                    # the frame down exactly once
+                    rt_faults.check_write(name)
+                    f.seek(pos)
+                    f.write(fr)
 
-            self.retry.call(write_framed,
-                            describe=manifest["packs"][pack])
-            offsets[pack] += len(framed)
-            raw_total += raw
-            comp_total += entry["bytes"]
-            manifest["leaves"].append(entry)
+                self.retry.call(write_framed,
+                                describe=manifest["packs"][pack])
+                offsets[pack] += len(framed)
+                raw_total += raw
+                comp_total += entry["bytes"]
+                manifest["leaves"].append(entry)
 
         try:
             with ThreadPoolExecutor(max_workers=workers) as ex:
@@ -556,12 +613,36 @@ class CheckpointManager:
             f"{self.root}: " + "; ".join(causes))
 
     @staticmethod
-    def _require_records(names, by_name, cdir, what="records"):
-        missing = [n for n in names if n not in by_name]
+    def _require_records(names, by_name, cdir, what="records", groups=None):
+        missing = [n for n in names
+                   if n not in by_name and not (groups and n in groups)]
         if missing:
             raise CheckpointError(
                 f"checkpoint {cdir.name} lacks {what} for {missing[:5]}"
                 + ("…" if len(missing) > 5 else ""))
+
+    @staticmethod
+    def _expert_groups(manifest) -> dict:
+        """parent leaf name -> its per-expert record entries (the
+        ``expert_records`` save layout splits one ``(L, E, ...)`` leaf
+        into ``L*E`` sub-records named ``{parent}::x{l:04d}.{j:04d}``)."""
+        groups: dict = {}
+        for e in manifest["leaves"]:
+            spec = e.get("handle")
+            if spec is not None and spec.get("kind") == "expert":
+                groups.setdefault(spec["parent"], []).append(e)
+        return groups
+
+    @staticmethod
+    def _expand_entries(names, by_name, groups):
+        """Record entries to read for ``names``, expert groups inlined."""
+        out = []
+        for n in names:
+            if n in by_name:
+                out.append(by_name[n])
+            else:
+                out.extend(groups[n])
+        return out
 
     @staticmethod
     def _check_leaf(name, shape, like, dtype=None):
@@ -712,6 +793,13 @@ class CheckpointManager:
             vals[name] = val.astype(like.dtype)
             return
         ct = self._record_ct(e, blob, packs=packs)
+        spec = e.get("handle")
+        if spec is not None and spec.get("kind") == "expert":
+            # one slice of a per-expert record group: queued as a part,
+            # reassembled into the dense parent stack after the batched
+            # decode (_decode_pending)
+            pending.append((name, like, _ExpertPart(spec, ct)))
+            return
         obj = (handle_from_spec(e["handle"], ct)
                if "handle" in e and e.get("stack") else ct)
         pending.append((name, like, obj))
@@ -728,17 +816,41 @@ class CheckpointManager:
         callers (benches, CI) can assert the restore cost
         ``len(plan.buckets)`` dispatches."""
         plan = self.codec.plan_decode(
-            [obj.ct if is_handle(obj) else obj for _, _, obj in pending])
+            [obj.ct if (is_handle(obj) or isinstance(obj, _ExpertPart))
+             else obj for _, _, obj in pending])
         decs = self.codec.execute(plan)
         # keep only the inspectable summary: the execution-state fields
         # hold the full compressed streams on device and would pin them
         # until the next load
         self.last_decode_plan = dataclasses.replace(
             plan, _treedef=None, _groups=[], _passthrough={}, _leaves=[])
+        parents: dict = {}
         for (name, like, obj), dec in zip(pending, decs):
+            if isinstance(obj, _ExpertPart):
+                g = parents.setdefault(
+                    obj.spec["parent"],
+                    {"like": like, "spec": obj.spec, "decs": {}})
+                g["decs"][(int(obj.spec["layer"]),
+                           int(obj.spec["expert"]))] = dec
+                continue
             val = finish_materialize(obj, dec) if is_handle(obj) else dec
             self._check_leaf(name, val.shape, like)
             vals[name] = val.astype(like.dtype)
+        for parent, g in parents.items():
+            sp = g["spec"]
+            nl, ne = int(sp["n_layers"]), int(sp["n_experts"])
+            eshape = tuple(int(s) for s in sp["expert_shape"])
+            self._check_leaf(parent, (nl, ne) + eshape, g["like"])
+            buf = np.empty((nl, ne) + eshape, jnp.dtype(sp["dtype"]))
+            for l in range(nl):
+                for j in range(ne):
+                    dec = g["decs"].get((l, j))
+                    if dec is None:
+                        raise CheckpointError(
+                            f"{parent}: expert record grid incomplete — "
+                            f"missing layer {l} expert {j}")
+                    buf[l, j] = np.asarray(dec)
+            vals[parent] = jnp.asarray(buf).astype(g["like"].dtype)
 
     def _apply_decode_faults(self, pending, manifest, by_name, report):
         """Fault-injection hook for the decode dispatch: records matched
@@ -868,14 +980,20 @@ class CheckpointManager:
         rep = report if policy == "degraded" else None
         names, leaves, treedef = _tree_paths(like_tree)
         by_name = {e["name"]: e for e in manifest["leaves"]}
-        self._require_records(names, by_name, cdir)
+        groups = self._expert_groups(manifest)
+        self._require_records(names, by_name, cdir, groups=groups)
         like_by_name = dict(zip(names, leaves))
+        for parent in groups:
+            if parent in like_by_name:
+                # sub-records validate (and fall back) against the parent
+                for e in groups[parent]:
+                    like_by_name[e["name"]] = like_by_name[parent]
         packs = manifest.get("packs")
         vals = {}
         pending: list = []
-        for e, payload in self._iter_records(cdir, manifest,
-                                             [by_name[n] for n in names],
-                                             report=rep):
+        for e, payload in self._iter_records(
+                cdir, manifest, self._expand_entries(names, by_name, groups),
+                report=rep):
             try:
                 self._queue_record(e, payload, pending, vals,
                                    like_by_name[e["name"]], packs=packs)
@@ -926,7 +1044,8 @@ class CheckpointManager:
                          step: Optional[int] = None, prefix: str = "",
                          min_bytes: int = rt_streaming.MIN_STREAM_BYTES,
                          shards: int = rt_streaming.STREAM_SHARDS,
-                         policy: str = "strict", mesh=None):
+                         policy: str = "strict", mesh=None,
+                         expert_store=None):
         """Restore ONLY the weight records into a serving handle tree.
 
         ``like_params`` is the (dense) params structure — ShapeDtypeStructs
@@ -957,7 +1076,15 @@ class CheckpointManager:
         stream shards upload to their OWNING devices only (the per-shard
         pack bytes never fan out over h2d — ``collectives.stream_placer``),
         and the finished tree is placed per ``collectives.serving_pspecs``
-        (stream shards on the "model" axis, dense math replicated)."""
+        (stream shards on the "model" axis, dense math replicated).
+
+        Checkpoints saved with ``expert_records=True`` hold MoE expert
+        stacks as per-expert wire records: those restore straight into an
+        :class:`~repro.runtime.experts.ExpertStore` (``expert_store``, or
+        a fresh unbounded one — also stashed on ``last_expert_store``)
+        WITHOUT inflating or uploading a single cold expert; the tree gets
+        an ``ExpertRef`` handle per stack and routed experts decode
+        on demand through the store's LRU cache (docs/MOE.md)."""
         if mode not in rt_streaming.WEIGHT_MODES:
             raise ValueError(f"unknown weight mode {mode!r}")
         from repro.runtime import collectives as rt_collectives
@@ -969,8 +1096,23 @@ class CheckpointManager:
         names, leaves, treedef = _tree_paths(like_params)
         full = [f"{prefix}/{n}" if prefix else n for n in names]
         by_name = {e["name"]: e for e in manifest["leaves"]}
-        self._require_records(full, by_name, cdir, what="weight records")
+        groups = {p: es for p, es in self._expert_groups(manifest).items()
+                  if p in set(full)}
+        if groups and mesh is not None:
+            raise CheckpointError(
+                "expert-record checkpoints cannot restore onto a serving "
+                "mesh yet: the expert store decodes host-side per step "
+                "(see docs/MOE.md) — load with mesh=None")
+        est = expert_store
+        if est is None and groups:
+            est = rt_experts.ExpertStore(codec=self.codec)
+        self.last_expert_store = est if groups else None
+        self._require_records(full, by_name, cdir, what="weight records",
+                              groups=groups)
         like_by_name = dict(zip(full, leaves))
+        for parent, es in groups.items():
+            for e in es:
+                like_by_name[e["name"]] = like_by_name[parent]
         vals = {}
         pending: list = []
 
@@ -981,6 +1123,18 @@ class CheckpointManager:
             exactly the path it would have taken undamaged."""
             name = e["name"]
             spec = e.get("handle")
+            if spec is not None and spec.get("kind") == "expert":
+                # per-expert record: the compressed bytes go STRAIGHT into
+                # the expert store — no upload, no decode; cold experts
+                # stay wire records until routing asks for them
+                est.add_meta(spec["parent"],
+                             n_layers=spec["n_layers"],
+                             n_experts=spec["n_experts"],
+                             expert_shape=spec["expert_shape"],
+                             dtype=spec["dtype"])
+                est.add_record(spec["parent"], spec["layer"],
+                               spec["expert"], bytes(payload))
+                return
             # a record arriving here while already quarantined is the
             # FALLBACK copy from an earlier step — adoption relaxes to any
             # bit-identical handle kind (see _spec_serves_mode)
@@ -1023,9 +1177,9 @@ class CheckpointManager:
             self._queue_record(e, payload, pending, vals, like,
                                packs=man.get("packs"))
 
-        for e, payload in self._iter_records(cdir, manifest,
-                                             [by_name[n] for n in full],
-                                             report=rep):
+        for e, payload in self._iter_records(
+                cdir, manifest, self._expand_entries(full, by_name, groups),
+                report=rep):
             try:
                 serve_record(e, payload, like_by_name[e["name"]], manifest,
                              pending, vals)
@@ -1038,6 +1192,18 @@ class CheckpointManager:
             self._fallback_restore(rep, manifest, like_by_name, vals,
                                    pending, process=serve_record)
         self._decode_pending(pending, vals)
+        for parent in groups:
+            m = est.meta(parent)
+            self._check_leaf(
+                parent,
+                (m["n_layers"], m["n_experts"]) + tuple(m["expert_shape"]),
+                like_by_name[parent], dtype=m["dtype"])
+            miss = est.missing(parent)
+            if miss:
+                raise CheckpointError(
+                    f"{parent}: expert record grid incomplete — missing "
+                    f"{miss[:5]}" + ("…" if len(miss) > 5 else ""))
+            vals[parent] = est.ref(parent)
         self._finish_report(report)
         tree = jax.tree_util.tree_unflatten(treedef,
                                             [vals.pop(n) for n in full])

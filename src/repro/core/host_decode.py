@@ -1,0 +1,314 @@
+"""Pure-host (numpy) ENEC record decode — no device, no jit, no uploads.
+
+The expert-streaming fetch (``runtime/experts.py``) runs inside an ordered
+``io_callback`` while the outer jitted step program occupies the device.
+Launching device compute from that callback — eager ops or a nested jit —
+deadlocks on a single-device backend: the inner decode queues behind the
+very program that is blocked waiting for the callback to return.  So the
+callback must decode entirely on the host.
+
+This module is the bit-exact numpy port of the reference decode pipeline
+(``core.codec.decode_blocks`` + ``from_blocks``): every step is integer
+shift/mask/cumsum/gather arithmetic, so the numpy and jax paths produce
+identical bits by construction (regression-tested in
+``tests/test_experts.py``).  It also owns the host-side record parse — the
+same wire layout :func:`core.wire.from_wire` reads, minus the ``h2d``
+uploads — and a bucketed batch decode that mirrors the codec's
+``plan_decode`` grouping: records sharing ``(fmt, params, block_elems)``
+concatenate into ONE vectorized decode call, so a fetch of R records costs
+O(#buckets) decode dispatches, not O(R).
+"""
+from __future__ import annotations
+
+import struct
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from . import bitio
+from .codec import stream_shapes
+from .dtypes import FORMATS, FloatFormat
+from .params import EnecParams
+from .wire import MAGIC, WireError, _FMT_FROM_TAG, _MODE_FROM_TAG
+
+
+class HostRecord(NamedTuple):
+    """One parsed wire record, every stream a host numpy array.  ``high``
+    is kept in its DENSE per-block form (``(B, block_elems) uint16``) —
+    the exact-bit wire stream is unpacked once at parse time and the
+    decode consumes it directly, skipping the device path's pad/repack
+    round trip (bit-identical: the packed form is a pure relayout)."""
+    mode: str
+    fmt_name: str
+    params: Optional[EnecParams]
+    shape: tuple
+    dtype_str: str
+    block_elems: int
+    nblocks: int
+    mask: Optional[np.ndarray]
+    low: Optional[np.ndarray]
+    high: Optional[np.ndarray]
+    raw: Optional[np.ndarray]
+    raw_bytes: Optional[np.ndarray]   # raw/const modes only
+
+
+def parse_record(buf, *, record=None) -> HostRecord:
+    """Parse one EXACT wire-record slice into host arrays.
+
+    Same validation surface as :func:`core.wire.from_wire` (bad magic,
+    truncation, trailing bytes and impossible lengths raise
+    :class:`~core.wire.WireError`) but nothing touches the device and no
+    transfer counter moves — this is the decode-cache ingest path.
+    """
+    def _err(msg):
+        return WireError(msg, record=record)
+
+    view = memoryview(buf)
+    total = len(view)
+    off = 0
+    try:
+        magic, mode_tag, fmt_tag, stack = struct.unpack_from("<IBBH", view, off)
+        off += 8
+        if magic != MAGIC:
+            raise _err(f"bad ENEC wire magic {magic:#x}")
+        if mode_tag not in _MODE_FROM_TAG:
+            raise _err(f"unknown mode tag {mode_tag}")
+        mode = _MODE_FROM_TAG[mode_tag]
+        (ndim,) = struct.unpack_from("<I", view, off); off += 4
+        if ndim > 16:
+            raise _err(f"implausible ndim {ndim}")
+        if off + 8 * ndim > total:
+            raise _err(f"record truncated in the {ndim}-dim shape")
+        shape = tuple(np.frombuffer(view, np.int64, ndim, off).tolist())
+        off += 8 * ndim
+        (dtype_raw,) = struct.unpack_from("<8s", view, off); off += 8
+        dtype_str = bytes(dtype_raw).rstrip(b"\x00").decode()
+        np.dtype(_np_dtype(dtype_str))   # must name a real dtype
+        block_elems, shards = struct.unpack_from("<II", view, off); off += 8
+    except WireError:
+        raise
+    except (struct.error, UnicodeDecodeError, TypeError, ValueError) as e:
+        raise _err(f"corrupt record header: {e}") from None
+
+    if mode in ("raw", "const"):
+        raw = np.frombuffer(view, np.uint8, -1, off)
+        itemsize = np.dtype(_np_dtype(dtype_str)).itemsize
+        expect = (itemsize if mode == "const"
+                  else int(np.prod(shape, dtype=np.int64)) * itemsize)
+        if raw.nbytes != expect:
+            raise _err(
+                f"{mode} record carries {raw.nbytes} payload bytes, "
+                f"expected {expect} for shape {shape} dtype {dtype_str}")
+        return HostRecord(mode, _FMT_FROM_TAG.get(fmt_tag, "bf16"), None,
+                          shape, dtype_str, block_elems, 0,
+                          None, None, None, None, raw)
+
+    if fmt_tag not in _FMT_FROM_TAG:
+        raise _err(f"unknown float format tag {fmt_tag}")
+    fmt = FORMATS[_FMT_FROM_TAG[fmt_tag]]
+    try:
+        b, n, m, L, l = struct.unpack_from("<5i", view, off); off += 20
+        (nblocks,) = struct.unpack_from("<I", view, off); off += 4
+    except struct.error as e:
+        raise _err(f"record truncated in params: {e}") from None
+    p = EnecParams(b=b, n=n, m=m, L=L, l=l)
+    if not (0 <= m <= n <= 32 and L >= 1 and block_elems >= 1):
+        raise _err(f"implausible params {p.astuple()} "
+                   f"block_elems={block_elems}")
+    if shards < 1 or nblocks % (max(stack, 1) * shards):
+        raise _err(f"nblocks={nblocks} not divisible by "
+                   f"stack={stack} * shards={shards} — corrupt header")
+
+    def take(nb, what):
+        nonlocal off
+        need = nblocks * nb
+        if off + need > total:
+            raise _err(
+                f"{what} stream truncated: need {need} bytes at offset "
+                f"{off}, record has {total - off} left")
+        arr = np.frombuffer(view, np.uint8, need, off).reshape(nblocks, nb)
+        off += need
+        return arr
+
+    if off + 4 * nblocks > total:
+        raise _err("high_len vector truncated")
+    high_len = np.frombuffer(view, np.uint32, nblocks, off)
+    off += 4 * nblocks
+    widths = stream_shapes(block_elems, fmt, p)
+    mask = take(widths["mask"], "mask")
+    low = take(widths["low"], "low")
+    raw = take(widths["raw"], "raw")
+    width = p.n - p.m
+    dense = np.zeros((nblocks, block_elems), np.uint16)
+    if width:
+        max_bits = block_elems * width
+        for blk in range(nblocks):
+            bits = int(high_len[blk])
+            if bits < 0 or bits > max_bits:
+                raise _err(
+                    f"block {blk}: high_len {bits} bits exceeds the "
+                    f"{max_bits}-bit block bound — corrupt record")
+            nbytes = (bits + 7) // 8
+            if off + nbytes > total:
+                raise _err(f"block {blk}: high stream truncated")
+            count = bits // width
+            try:
+                dense[blk, :count] = bitio.np_unpack_bits_exact(
+                    view[off : off + nbytes], count, width)
+            except ValueError as e:
+                raise _err(f"block {blk}: {e}") from None
+            off += nbytes
+    if off != total:
+        raise _err(
+            f"record has {total - off} trailing bytes after the high "
+            f"stream — length mismatch (corrupt or mis-framed)")
+    return HostRecord("enec", fmt.name, p, shape, dtype_str, block_elems,
+                      nblocks, mask, low, dense, raw, None)
+
+
+# ---------------------------------------------------------------------------
+# numpy ports of the decode kernels (bit-exact vs core.codec / transform)
+# ---------------------------------------------------------------------------
+
+def _np_dtype(dtype_str: str):
+    """Host dtype for a wire dtype tag; bf16 resolves via ml_dtypes (the
+    same registration jax uses, so views/astype agree bit for bit)."""
+    if dtype_str == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(dtype_str)
+
+
+def _unpack_bool_mask_np(mask_bytes: np.ndarray, g: int) -> np.ndarray:
+    """numpy port of ``bitio.unpack_bool_mask`` (little-endian bits)."""
+    shifts = np.arange(8, dtype=np.uint8)
+    bits = (mask_bytes[..., :, None] >> shifts) & np.uint8(1)
+    return bits.reshape(mask_bytes.shape[:-1] + (g,)).astype(bool)
+
+
+def _inverse_np(y: np.ndarray, b, n: int, l) -> np.ndarray:
+    """numpy port of ``transform.inverse``: ``x = l + ((b - y - l) mod
+    2**n)`` on unsigned lanes.  ``b`` and ``l`` are scalars or per-block
+    ``(nblocks, 1)`` columns — like the reference decoder, which takes
+    them as traced operands so blocks with different transform offsets
+    share one decode program (``Codec._decoder_key``)."""
+    mod = y.dtype.type((1 << n) - 1)
+    b = np.asarray(b, y.dtype)
+    l = np.asarray(l, y.dtype)
+    c = (b - l) & mod
+    return l + ((c - y) & mod)
+
+
+def _combine_fields_np(exp: np.ndarray, raw: np.ndarray,
+                       fmt: FloatFormat) -> np.ndarray:
+    """numpy port of ``dtypes.combine_fields``."""
+    ud = fmt.np_uint_dtype
+    exp = exp.astype(ud)
+    raw = raw.astype(ud)
+    sign = raw >> fmt.mant_bits
+    mant = raw & ud(fmt.mant_mask)
+    return (sign << (fmt.total_bits - 1)) | (exp << fmt.mant_bits) | mant
+
+
+def decode_blocks_np(mask: np.ndarray, low: np.ndarray, high: np.ndarray,
+                     raw: np.ndarray, n_elems: int, fmt: FloatFormat,
+                     p: EnecParams, b=None, l=None) -> np.ndarray:
+    """numpy port of ``core.codec.decode_blocks`` -> (B, N) uint bits.
+
+    ``high`` arrives DENSE (``(B, N//L, L)``-able uint16, rank-ordered) —
+    the parse already unpacked the exact wire bits, so no fixed-width
+    unpack round trip is needed here.  ``b``/``l`` override the transform
+    offsets per block (``(B, 1)`` columns) when the batch mixes records
+    whose searched params share ``(n, m, L)`` but not ``(b, l)``.
+    """
+    nblocks = mask.shape[0]
+    g = n_elems // p.L
+
+    anom = _unpack_bool_mask_np(mask, g)                       # (B, G)
+    rank = np.cumsum(anom, axis=1, dtype=np.int32) - anom.astype(np.int32)
+
+    y_low = bitio.unpack_fixed(low, n_elems, p.m, xp=np)
+    y_low = np.asarray(y_low).reshape(nblocks, g, p.L)
+    high_dense = high.reshape(nblocks, g, p.L)
+
+    gathered = np.take_along_axis(high_dense, rank[:, :, None], axis=1)
+    gathered = np.where(anom[:, :, None], gathered, np.uint16(0))
+
+    y = (y_low | (gathered << p.m)).reshape(nblocks, n_elems)
+    exp = _inverse_np(y, p.b if b is None else b, p.n,
+                      p.l if l is None else l)
+
+    rawv = bitio.unpack_fixed(raw, n_elems, fmt.raw_bits,
+                              out_dtype=fmt.np_uint_dtype, xp=np)
+    return _combine_fields_np(exp, np.asarray(rawv), fmt)
+
+
+def _from_blocks_np(bits: np.ndarray, shape: tuple,
+                    dtype_str: str) -> np.ndarray:
+    size = int(np.prod(shape, dtype=np.int64))
+    flat = np.ascontiguousarray(bits).reshape(-1).view(_np_dtype(dtype_str))
+    return flat[:size].reshape(shape)
+
+
+def _decode_trivial(rec: HostRecord) -> np.ndarray:
+    dt = _np_dtype(rec.dtype_str)
+    if rec.mode == "const":
+        return np.broadcast_to(rec.raw_bytes.view(dt), rec.shape).copy()
+    return rec.raw_bytes.view(dt).reshape(rec.shape).copy()
+
+
+def decode_many(recs):
+    """Decode parsed records with ONE vectorized numpy decode per bucket.
+
+    Bucket key = ``(fmt, (n, m, L), block_elems)`` — the host mirror of
+    the codec's ``plan_decode`` grouping (``Codec._decoder_key``, whose
+    reference backend takes the transform offsets ``(b, l)`` as traced
+    per-block operands): records whose searched params differ only in
+    ``(b, l)`` still share a bucket, concatenate along the block axis,
+    and decode in a single vectorized call with per-block offset columns,
+    so R records cost O(#buckets) decode dispatches.
+    Returns ``(arrays, n_buckets)`` with ``arrays`` aligned to ``recs``;
+    raw/const records are relayouts, not dispatches, and don't count.
+    """
+    out = [None] * len(recs)
+    buckets = {}
+    for i, rec in enumerate(recs):
+        if rec.mode != "enec":
+            out[i] = _decode_trivial(rec)
+            continue
+        if np.dtype(_np_dtype(rec.dtype_str)).itemsize != \
+                FORMATS[rec.fmt_name].total_bits // 8:
+            raise WireError(
+                f"record dtype {rec.dtype_str} does not match float "
+                f"format {rec.fmt_name}", record=None)
+        p = rec.params
+        key = (rec.fmt_name, (p.n, p.m, p.L), rec.block_elems)
+        buckets.setdefault(key, []).append(i)
+    for (fmt_name, _, block_elems), idxs in buckets.items():
+        fmt = FORMATS[fmt_name]
+        p = recs[idxs[0]].params
+        mask = np.concatenate([recs[i].mask for i in idxs], axis=0)
+        low = np.concatenate([recs[i].low for i in idxs], axis=0)
+        high = np.concatenate([recs[i].high for i in idxs], axis=0)
+        raw = np.concatenate([recs[i].raw for i in idxs], axis=0)
+        b_col = np.concatenate(
+            [np.full((recs[i].nblocks, 1), recs[i].params.b, np.int64)
+             for i in idxs])
+        l_col = np.concatenate(
+            [np.full((recs[i].nblocks, 1), recs[i].params.l, np.int64)
+             for i in idxs])
+        bits = decode_blocks_np(mask, low, high, raw, block_elems, fmt, p,
+                                b=b_col, l=l_col)
+        off = 0
+        for i in idxs:
+            nb = recs[i].nblocks
+            out[i] = _from_blocks_np(bits[off : off + nb], recs[i].shape,
+                                     recs[i].dtype_str)
+            off += nb
+    return out, len(buckets)
+
+
+def decode_record(rec: HostRecord) -> np.ndarray:
+    """Decode one parsed record (single-bucket convenience)."""
+    arrs, _ = decode_many([rec])
+    return arrs[0]

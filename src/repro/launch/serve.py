@@ -81,7 +81,8 @@ def _link_line(tag, codec):
     return f"[launch.serve] {tag} links: " + " ".join(parts)
 
 
-def _restore_params(args, model, mode, codec, policy, mesh=None):
+def _restore_params(args, model, mode, codec, policy, mesh=None,
+                    expert_store=None):
     """--ckpt: weights come from the checkpoint, never from init.  The
     launcher's explicit codec owns the restore: its transfer counter and
     decoder cache stats are what gets reported.
@@ -105,7 +106,7 @@ def _restore_params(args, model, mode, codec, policy, mesh=None):
     params, _ = mgr.load_for_serving(like, mode=mode, prefix=prefix,
                                      min_bytes=args.min_bytes,
                                      shards=args.shards, policy="degraded",
-                                     mesh=mesh)
+                                     mesh=mesh, expert_store=expert_store)
     jax.block_until_ready(jax.tree.leaves(params))
     dt = time.perf_counter() - t0
     ts = codec.transfer_stats()
@@ -145,6 +146,13 @@ def main():
                          "either way")
     ap.add_argument("--min-bytes", type=int, default=4096,
                     help="smallest leaf worth compressing")
+    ap.add_argument("--expert-cache-mb", type=float, default=None,
+                    metavar="MB",
+                    help="MoE expert streaming (docs/MOE.md): keep expert "
+                         "stacks as per-expert compressed records and "
+                         "decode routed experts through a byte-budgeted "
+                         "LRU cache of this many MB (0 caches nothing; "
+                         "only MoE arches have eligible leaves)")
     ap.add_argument("--shards", type=int, default=None,
                     help="stream-mode TP shard count for the block dim "
                          "(default: the serving mesh's model-axis width "
@@ -197,6 +205,9 @@ def main():
                  "(restored weights are already checkpointed)")
     mode = "dense" if args.dense else (args.mode or "fused")
     policy = "strict" if args.strict else "degraded"
+    if args.expert_cache_mb is not None and (args.mesh or args.tp > 1):
+        ap.error("--expert-cache-mb does not compose with --mesh/--tp yet: "
+                 "the expert store decodes host-side per step (docs/MOE.md)")
     HEALTH.reset()   # embedded back-to-back runs never inherit stale state
 
     mesh = None
@@ -218,12 +229,20 @@ def main():
     # it, so a second model in the same process cannot perturb them
     codec = Codec(encode_backend=args.codec_backend,
                   decode_backend=args.codec_backend)
+    expert_store = None
+    if args.expert_cache_mb is not None:
+        # 0 MB is a legal budget: every routed expert is a miss and is
+        # dropped right after the step (the worst-case decode cost probe)
+        from repro.runtime.experts import ExpertStore
+        expert_store = ExpertStore(
+            budget_bytes=int(args.expert_cache_mb * 2**20), codec=codec)
     if args.ckpt:
         from repro.checkpoint.ckpt import CheckpointError
         HEALTH.transition("restoring")
         try:
             params, report = _restore_params(args, model, mode, codec,
-                                             policy, mesh=mesh)
+                                             policy, mesh=mesh,
+                                             expert_store=expert_store)
         except (CheckpointError, FileNotFoundError) as e:
             HEALTH.transition("failed", str(e))
             print(f"[launch.serve] restore FAILED: {e}")
@@ -245,6 +264,12 @@ def main():
             HEALTH.transition("ready")
     else:
         params = model.init(jax.random.key(0))
+        if expert_store is not None:
+            # BEFORE assign_weight_modes: expert stacks become ExpertRef
+            # handles and the mode assignment passes them through
+            from repro.runtime.experts import install_expert_store
+            params, _ = install_expert_store(params, store=expert_store,
+                                             min_bytes=args.min_bytes)
         params = assign_weight_modes(params, mode=mode,
                                      min_bytes=args.min_bytes,
                                      shards=args.shards, codec=codec)
@@ -260,6 +285,7 @@ def main():
                 serving_layout=None if mode == "dense" else mode,
                 serving_min_bytes=args.min_bytes,
                 serving_shards=args.shards,
+                expert_records=expert_store is not None,
                 codec=codec)
             t0 = time.perf_counter()
             mgr.save(0, {"params": params}, blocking=True)
@@ -288,7 +314,7 @@ def main():
         default_deadline_s=args.deadline_ms / 1e3 if args.deadline_ms
         else None)
     engine = Engine(model, params, ecfg, codec=codec, health=HEALTH,
-                    extra_context=extra_ctx)
+                    extra_context=extra_ctx, expert_store=expert_store)
     prompts = np.asarray(jax.random.randint(
         jax.random.key(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size), np.int32)
@@ -323,6 +349,17 @@ def main():
           f"timed_out={st['timed_out']} shed={st['shed']} "
           f"evicted={evicted} rejected={st['rejected']} "
           f"governor={engine.governor.state}")
+    if expert_store is not None:
+        es = expert_store.stats()
+        dec_ms = (1e3 * sum(engine.step_decode_s)
+                  / max(1, len(engine.step_decode_s)))
+        budget = ("inf" if es["budget_bytes"] is None
+                  else f"{es['budget_bytes'] / 1e6:.2f}MB")
+        print(f"[launch.serve] experts: hits={es['hits']} "
+              f"misses={es['misses']} evictions={es['evictions']} "
+              f"fetches={es['fetches']} buckets={es['fetch_buckets']} "
+              f"resident={es['resident_bytes'] / 1e6:.2f}MB/{budget} "
+              f"miss-decode={dec_ms:.2f}ms/step")
     print(_link_line("serve", codec))
     if reqs and reqs[0].tokens:
         print("[launch.serve] seq0:", list(reqs[0].tokens))

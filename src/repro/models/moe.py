@@ -16,11 +16,24 @@ with all-to-all dispatch/return is hillclimb material — see EXPERIMENTS.md
 §Perf.]
 
 Aux losses: Switch load-balancing + router z-loss, returned to the caller.
+
+Expert streaming (runtime/experts.py, docs/MOE.md): when the expert
+stacks arrive as :class:`~repro.runtime.experts.ExpertRef` handles
+instead of dense arrays, the block fetches only the step's ROUTED experts
+through the store's LRU decode cache and receives full ``(E, ...)``
+stacks with zeros in unrouted slots.  Bit-identity with the dense path is
+structural, not approximate: the combine masks zero-gate capacity slots
+to exactly ``+0.0`` (``jnp.where`` below) so a slot's contribution never
+depends on the weight bytes behind an unrouted expert, and routed experts
+decode losslessly — both paths feed the scatter-add identical addends in
+identical order.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.runtime.experts import ExpertRef, routed_expert_stacks
 
 from .layers import ACT_DTYPE, dense_init, safe_einsum
 
@@ -44,6 +57,22 @@ def capacity_for(seq_len: int, n_experts: int, k: int,
     if seq_len >= 8:
         c = min(max(8, (c + 7) // 8 * 8), seq_len)
     return c
+
+
+def _expert_weights(p, topk_i):
+    """The step's (e_gate, e_up, e_down) stacks: dense arrays pass
+    through; :class:`ExpertRef` handles fetch the routed experts via the
+    store's batched LRU decode path (zeros in unrouted slots)."""
+    leaves = (p["e_gate"], p["e_up"], p["e_down"])
+    refs = [w for w in leaves if isinstance(w, ExpertRef)]
+    if not refs:
+        return leaves
+    if len(refs) != len(leaves):
+        raise TypeError(
+            "moe_block needs e_gate/e_up/e_down uniformly dense or "
+            "uniformly expert-streamed; got a mix — see "
+            "runtime.experts.install_expert_store")
+    return routed_expert_stacks(refs, topk_i)
 
 
 def moe_block(p, x, k: int, combine_dtype: str = "f32",
@@ -80,12 +109,17 @@ def moe_block(p, x, k: int, combine_dtype: str = "f32",
         x_ec = jax.lax.with_sharding_constraint(
             x_ec, _P(None, "model", None, "data"))
 
-    g = safe_einsum("becd,edf->becf", x_ec, p["e_gate"])
-    u = safe_einsum("becd,edf->becf", x_ec, p["e_up"])
+    w_gate, w_up, w_down = _expert_weights(p, topk_i)
+    g = safe_einsum("becd,edf->becf", x_ec, w_gate)
+    u = safe_einsum("becd,edf->becf", x_ec, w_up)
     h = (jax.nn.silu(g) * u).astype(ACT_DTYPE)
-    y_ec = safe_einsum("becf,efd->becd", h, p["e_down"])  # (B, E, C, D) f32
+    y_ec = safe_einsum("becf,efd->becd", h, w_down)  # (B, E, C, D) f32
 
-    y_ec = y_ec * gate_ec[..., None]
+    # zero-gate capacity slots (unassigned capacity AND every slot of an
+    # unrouted expert) contribute exactly +0.0 — a bare multiply could
+    # leak a weight-dependent -0.0, breaking dense-vs-streamed
+    # bit-identity at those slots
+    y_ec = jnp.where(gate_ec[..., None] > 0, y_ec * gate_ec[..., None], 0.0)
     acc_dt = jnp.bfloat16 if combine_dtype == "bf16" else jnp.float32
     out = jnp.zeros((b, t, d), acc_dt)
     out = out.at[bidx, idx_ec].add(y_ec.astype(acc_dt))    # combine (psum on EP)

@@ -152,12 +152,18 @@ class Engine:
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
                  health: Optional[ServerHealth] = None,
-                 extra_context: Optional[Callable] = None):
+                 extra_context: Optional[Callable] = None,
+                 expert_store=None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.config = config
         self.codec = codec
+        # the MoE expert-streaming store behind any ExpertRef handles in
+        # ``params`` (runtime/experts.py): observed for cache stats and
+        # per-step cache-miss decode cost; the fetches themselves happen
+        # inside the model's moe_block via io_callback
+        self.expert_store = expert_store
         self.clock = clock
         self.sleep = sleep
         self.retry = retry if retry is not None \
@@ -190,6 +196,10 @@ class Engine:
                          "evicted_abort": 0, "steps": 0, "prefills": 0,
                          "fault_retries": 0}
         self.step_times_s: List[float] = []
+        # per decode step: expert-cache MISS decode seconds (0.0 on a
+        # fully-resident step) — step_times_s[i] - step_decode_s[i] is the
+        # compute-only cost, making the cache-budget latency knob visible
+        self.step_decode_s: List[float] = []
         self._draining = False
         # a launcher may hand in a health object already in "degraded"
         # (quarantined restore) — that outranks a plain "ready"
@@ -452,6 +462,8 @@ class Engine:
         bucket = _next_bucket(max(r.slot for r in active) + 1,
                               self.config.max_slots)
         fn = self._step_fn(bucket)
+        dec0 = (self.expert_store.decode_seconds()
+                if self.expert_store is not None else 0.0)
         t0 = self.clock()
         with self._trace_ctx():
             # real (non-injected) transient runtime errors ride the same
@@ -473,6 +485,9 @@ class Engine:
         dt = self.clock() - t0
         self.counters["steps"] += 1
         self.step_times_s.append(dt)
+        self.step_decode_s.append(
+            (self.expert_store.decode_seconds() - dec0)
+            if self.expert_store is not None else 0.0)
         if self.governor.observe_step(dt):
             for req in self.queue.shed_lowest_priority(
                     self.config.shed_per_trip, reason="overload"):
@@ -546,8 +561,11 @@ class Engine:
     # -- observability ------------------------------------------------------
 
     def stats(self) -> dict:
-        """One dict with every counter a probe, bench, or test needs."""
-        return {
+        """One dict with every counter a probe, bench, or test needs.
+        ``experts`` (present when an expert store is installed) carries
+        the LRU hit/miss/eviction/resident-bytes counters next to the
+        engine counters."""
+        out = {
             "engine": dict(self.counters,
                            compiled_buckets=sorted(self._step_fns),
                            active=len(self._active()),
@@ -561,3 +579,6 @@ class Engine:
             "health": {"state": self.health.state,
                        "detail": self.health.detail},
         }
+        if self.expert_store is not None:
+            out["experts"] = self.expert_store.stats()
+        return out

@@ -1,0 +1,425 @@
+"""Compressed MoE expert streaming with a byte-budgeted LRU decode cache.
+
+MoE serving touches only ``k`` of ``E`` experts per token; the rest are
+dead weight in HBM.  This module keeps every expert as a *per-expert*
+compressed wire record in host RAM (or restored from the enec-v2 pack
+files, see checkpoint/ckpt.py) and materializes routed experts on demand:
+
+  :class:`ExpertStore`   per-(leaf, layer, expert) wire records + a
+                         byte-budgeted LRU cache of decoded expert arrays
+                         with hit/miss/eviction/resident-bytes counters
+  :class:`ExpertRef`     the weight-execution handle (kind "expert") that
+                         replaces an ``(L, E, ...)`` expert stack in the
+                         params tree; carries only a tiny ``(L,)``
+                         layer-id vector on device
+  :func:`routed_expert_stacks`
+                         the jit-safe fetch: an ordered ``io_callback``
+                         from inside ``models.moe.moe_block`` that hands
+                         the routing step's expert ids to the store and
+                         gets back full ``(E, ...)`` stacks with zeros in
+                         unrouted slots (bit-identity: see moe.py)
+
+Record layout: each ``(L, E, ...)`` stack is compressed as ONE stacked
+encode over ``L*E`` slices (all experts of a leaf share one searched
+param set), then sliced per expert (``core.api.slice_stacked``) into
+independent wire records.  Because every record of a leaf shares params
+and block geometry, a fetch that misses R experts across the three MoE
+leaves decodes them in O(#buckets) vectorized dispatches (at most one
+bucket per distinct leaf geometry), not O(R) — the same grouping contract
+as the codec's ``plan_decode``, mirrored host-side by
+``core.host_decode.decode_many``.  The decode itself is the PURE-NUMPY
+port of the codec kernels: the fetch callback runs while the jitted step
+program owns the device, so reentrant device compute would deadlock
+(see core/host_decode.py).
+
+Eviction: all of a fetch's experts are inserted/touched first and the LRU
+is trimmed to the byte budget afterwards, so the *current* step's working
+set is always intact when the einsum runs (a budget smaller than one
+step's working set evicts after use and misses again next step —
+``budget_bytes=0`` caches nothing).  Decoded cache entries live on the
+host; HBM holds only the routed stacks for the duration of a step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.core import host_decode
+from repro.core import wire as enec_wire
+from repro.core.api import slice_stacked
+from repro.core.codec_api import current_codec
+from repro.runtime.weights import WeightHandle
+
+# the MoE expert-stack leaves of models/moe.py, shaped (L, E, D, F) in the
+# layer-stacked params tree (period trees stack L periods on axis 0)
+EXPERT_LEAF_NAMES = frozenset({"e_gate", "e_up", "e_down"})
+
+
+class ExpertStoreError(RuntimeError):
+    """An expert record is missing or inconsistent."""
+
+
+def is_expert_leaf(name: str, leaf) -> bool:
+    """Is this params-tree leaf an ``(L, E, ...)`` MoE expert stack?"""
+    short = name.rsplit("/", 1)[-1]
+    return (short in EXPERT_LEAF_NAMES
+            and getattr(leaf, "ndim", 0) == 4)
+
+
+def _expert_block_elems(codec, n_elems: int) -> int:
+    """Encode block size for per-expert records.  Each record is its own
+    L=1 "layer" in the stacked encode, and layers pad to whole blocks — a
+    small expert (fewer elements than the codec's block size) would pad
+    to ``block_elems`` and trip the never-worse escape.  Pick the largest
+    128-multiple divisor of the expert size instead (zero padding);
+    experts at or above the default block size keep it."""
+    be = int(codec.config.block_elems)
+    if n_elems >= be:
+        return be
+    for cand in range(n_elems - n_elems % 128, 0, -128):
+        if n_elems % cand == 0:
+            return cand
+    return be
+
+
+def encode_expert_leaf(name: str, leaf, codec=None):
+    """Compress one ``(L, E, ...)`` expert stack into per-expert wire
+    records: ONE stacked encode over the ``L*E`` expert slices (shared
+    searched params -> shared decode bucket), then one sliced wire record
+    per expert.  Returns ``(meta, [(layer, expert, body_bytes), ...])`` or
+    ``None`` when the stack escapes compression (const / incompressible —
+    the caller keeps the dense leaf)."""
+    codec = codec or current_codec()
+    arr = jnp.asarray(leaf)
+    n_layers, n_experts = int(arr.shape[0]), int(arr.shape[1])
+    expert_shape = tuple(int(s) for s in arr.shape[2:])
+    n_elems = int(np.prod(expert_shape, dtype=np.int64))
+    ct = codec.compress_stacked_many(
+        [arr.reshape((n_layers * n_experts,) + expert_shape)],
+        block_elems=_expert_block_elems(codec, n_elems))[0]
+    if ct is None:
+        return None
+    meta = {"n_layers": n_layers, "n_experts": n_experts,
+            "expert_shape": expert_shape,
+            "dtype": str(jnp.dtype(arr.dtype))}
+    records = []
+    for l in range(n_layers):
+        for j in range(n_experts):
+            body = enec_wire.to_wire(
+                slice_stacked(ct, l * n_experts + j))
+            records.append((l, j, body))
+    return meta, records
+
+
+class ExpertStore:
+    """Host-side store of per-expert compressed records + the LRU cache.
+
+    Not a dataclass on purpose: equality/hash are identity, so
+    :class:`ExpertRef` handles referencing the same store compare equal as
+    jit static metadata and trace caches stay warm across steps.
+    """
+
+    def __init__(self, *, budget_bytes=None, codec=None):
+        self.codec = codec or current_codec()
+        self.budget_bytes = budget_bytes     # None = unbounded residency
+        self._records = {}                   # (name, layer, expert) -> bytes
+        self._meta = {}                      # name -> layout dict
+        self._lru = OrderedDict()            # (name, layer, expert) -> np
+        self._lock = threading.Lock()
+        self.last_fetch = {"records": 0, "buckets": 0}
+        self.reset_stats()
+
+    def reset_stats(self):
+        self._c = {"hits": 0, "misses": 0, "evictions": 0, "fetches": 0,
+                   "fetch_records": 0, "fetch_buckets": 0}
+        self._resident_bytes = 0
+        for a in self._lru.values():
+            self._resident_bytes += a.nbytes
+        self._decode_s = 0.0
+
+    # -- population ------------------------------------------------------
+
+    def add_leaf(self, name: str, leaf, *, codec=None) -> bool:
+        """Encode one dense ``(L, E, ...)`` stack into the store.  False
+        when the stack escapes compression (leaf stays dense)."""
+        enc = encode_expert_leaf(name, leaf, codec or self.codec)
+        if enc is None:
+            return False
+        meta, records = enc
+        self.add_meta(name, **meta)
+        for l, j, body in records:
+            self.add_record(name, l, j, body)
+        return True
+
+    def add_meta(self, name: str, *, n_layers: int, n_experts: int,
+                 expert_shape, dtype: str):
+        meta = {"n_layers": int(n_layers), "n_experts": int(n_experts),
+                "expert_shape": tuple(int(s) for s in expert_shape),
+                "dtype": str(dtype)}
+        prev = self._meta.setdefault(name, meta)
+        if prev != meta:
+            raise ExpertStoreError(f"{name}: conflicting layouts "
+                                   f"{prev} vs {meta}")
+
+    def add_record(self, name: str, layer: int, expert: int, body: bytes):
+        self._records[(name, int(layer), int(expert))] = bytes(body)
+
+    # -- introspection ---------------------------------------------------
+
+    def names(self):
+        return sorted(self._meta)
+
+    def meta(self, name: str) -> dict:
+        return dict(self._meta[name])
+
+    def complete(self, name: str) -> bool:
+        m = self._meta.get(name)
+        if m is None:
+            return False
+        return all((name, l, j) in self._records
+                   for l in range(m["n_layers"])
+                   for j in range(m["n_experts"]))
+
+    def missing(self, name: str):
+        m = self._meta[name]
+        return [(l, j) for l in range(m["n_layers"])
+                for j in range(m["n_experts"])
+                if (name, l, j) not in self._records]
+
+    def records_for(self, name: str):
+        """``[(layer, expert, body_bytes), ...]`` — the checkpoint save
+        path re-emits these verbatim (no re-encode)."""
+        m = self._meta[name]
+        out = []
+        for l in range(m["n_layers"]):
+            for j in range(m["n_experts"]):
+                try:
+                    out.append((l, j, self._records[(name, l, j)]))
+                except KeyError:
+                    raise ExpertStoreError(
+                        f"{name}: missing record for layer {l} "
+                        f"expert {j}") from None
+        return out
+
+    def expert_nbytes(self, name: str) -> int:
+        m = self._meta[name]
+        return (int(np.prod(m["expert_shape"], dtype=np.int64))
+                * jnp.dtype(m["dtype"]).itemsize)
+
+    def total_expert_bytes(self) -> int:
+        """Dense bytes of every expert in the store (the 100%-resident
+        cache budget)."""
+        return sum(self.expert_nbytes(n)
+                   * self._meta[n]["n_layers"] * self._meta[n]["n_experts"]
+                   for n in self._meta)
+
+    def ref(self, name: str) -> "ExpertRef":
+        m = self._meta[name]
+        return ExpertRef(
+            layer_ids=jnp.arange(m["n_layers"], dtype=jnp.int32),
+            name=name, store=self, n_experts=m["n_experts"],
+            expert_shape=m["expert_shape"], dtype_str=m["dtype"])
+
+    # -- fetch (the io_callback target) ----------------------------------
+
+    def fetch_step(self, names, layer: int, routed):
+        """One routing step's batched fetch: materialize ``routed`` expert
+        ids of ``layer`` for every leaf in ``names`` and return full
+        ``(E, ...)`` stacks with ZEROS in unrouted slots.  All misses
+        across the leaves decode host-side in one batched
+        ``host_decode.decode_many`` pass (O(#buckets) vectorized
+        dispatches); hits are LRU-touched; the LRU is trimmed to the byte
+        budget only after the step's stacks are assembled."""
+        layer = int(layer)
+        routed = sorted({int(r) for r in np.asarray(routed).ravel()})
+        with self._lock:
+            keys = [(n, layer, j) for n in names for j in routed]
+            missing = []
+            for k in keys:
+                if k in self._lru:
+                    self._lru.move_to_end(k)
+                    self._c["hits"] += 1
+                else:
+                    missing.append(k)
+                    self._c["misses"] += 1
+            if missing:
+                t0 = time.perf_counter()
+                recs = []
+                for k in missing:
+                    try:
+                        body = self._records[k]
+                    except KeyError:
+                        raise ExpertStoreError(
+                            f"no record for leaf {k[0]!r} layer {k[1]} "
+                            f"expert {k[2]}") from None
+                    recs.append(host_decode.parse_record(
+                        body, record=f"{k[0]}[{k[1]},{k[2]}]"))
+                # pure-host decode: the callback runs while the jitted step
+                # program OWNS the device — launching device compute here
+                # (eager or nested jit) deadlocks on a single-device
+                # backend, so misses decode with the numpy port
+                # (bit-exact vs the codec, one vectorized call per bucket)
+                decs, n_buckets = host_decode.decode_many(recs)
+                self._decode_s += time.perf_counter() - t0
+                self._c["fetches"] += 1
+                self._c["fetch_records"] += len(missing)
+                self._c["fetch_buckets"] += n_buckets
+                self.last_fetch = {"records": len(missing),
+                                   "buckets": n_buckets}
+                for k, dec in zip(missing, decs):
+                    a = np.asarray(dec)
+                    self._lru[k] = a
+                    self._resident_bytes += a.nbytes
+            outs = []
+            for n in names:
+                m = self._meta[n]
+                full = np.zeros((m["n_experts"],) + m["expert_shape"],
+                                dtype=jnp.dtype(m["dtype"]))
+                for j in routed:
+                    full[j] = self._lru[(n, layer, j)]
+                outs.append(full)
+            self._trim()
+            return tuple(outs)
+
+    def _trim(self):
+        while (self.budget_bytes is not None and self._lru
+               and self._resident_bytes > self.budget_bytes):
+            _, a = self._lru.popitem(last=False)
+            self._resident_bytes -= a.nbytes
+            self._c["evictions"] += 1
+
+    # -- whole-leaf materialization (tests, training-restore parity) -----
+
+    def materialize_leaf(self, name: str):
+        """Decode EVERY expert of ``name`` into the dense ``(L, E, ...)``
+        stack (one batched decode pass; bypasses the LRU)."""
+        m = self._meta[name]
+        recs = [host_decode.parse_record(body, record=f"{name}[{l},{j}]")
+                for l, j, body in self.records_for(name)]
+        decs, _ = host_decode.decode_many(recs)
+        full = np.empty((m["n_layers"], m["n_experts"]) + m["expert_shape"],
+                        dtype=jnp.dtype(m["dtype"]))
+        i = 0
+        for l in range(m["n_layers"]):
+            for j in range(m["n_experts"]):
+                full[l, j] = np.asarray(decs[i])
+                i += 1
+        return full
+
+    # -- observability ---------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = dict(self._c)
+            out.update(
+                records=len(self._records),
+                record_bytes=sum(len(b) for b in self._records.values()),
+                resident_experts=len(self._lru),
+                resident_bytes=self._resident_bytes,
+                budget_bytes=self.budget_bytes,
+                decode_s=round(self._decode_s, 6),
+                leaves=len(self._meta))
+            return out
+
+    def decode_seconds(self) -> float:
+        """Cumulative cache-miss decode wall time (the engine snapshots
+        this per step to expose miss cost in step timing)."""
+        with self._lock:
+            return self._decode_s
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ExpertRef(WeightHandle):
+    """Weight-execution handle (kind "expert") standing in for one
+    ``(L, E, ...)`` expert stack.  The only traced child is a tiny
+    ``(L,)`` layer-id vector — both layer-loop drivers (``lax.scan`` and
+    the unrolled ``tree.map(a[i])``) slice it to the per-layer scalar the
+    routed fetch callback needs; everything else is static metadata.
+    ``resolve()`` passes expert handles through untouched: the routed
+    fetch happens inside ``moe_block`` where the routing ids exist."""
+    layer_ids: jax.Array
+    name: str = dataclasses.field(metadata=dict(static=True))
+    store: ExpertStore = dataclasses.field(metadata=dict(static=True))
+    n_experts: int = dataclasses.field(metadata=dict(static=True))
+    expert_shape: tuple = dataclasses.field(metadata=dict(static=True))
+    dtype_str: str = dataclasses.field(metadata=dict(static=True))
+
+    def materialize(self, codec=None):
+        """Dense stack for the handle's layer coverage: the full
+        ``(L, E, ...)`` leaf for an unsliced handle, one layer's
+        ``(E, ...)`` stack after the layer loop sliced ``layer_ids``.
+        Host decode — usable only with concrete (non-traced) ids."""
+        full = self.store.materialize_leaf(self.name)
+        ids = np.asarray(self.layer_ids)
+        return jnp.asarray(full[int(ids)] if ids.ndim == 0 else full)
+
+    def raw_nbytes(self) -> int:
+        m = self.store.meta(self.name)
+        return (m["n_layers"] * m["n_experts"]
+                * self.store.expert_nbytes(self.name))
+
+
+def routed_expert_stacks(refs, topk_i):
+    """Fetch one routing step's expert weights through the store.
+
+    ``refs`` are the layer-sliced :class:`ExpertRef` handles of one MoE
+    block (``layer_ids`` already a scalar) and ``topk_i`` the
+    ``(B, T, k)`` routed expert ids.  Returns one ``(E, ...)`` stack per
+    ref, zeros in unrouted slots.  The ordered ``io_callback`` runs the
+    LRU + batched numpy decode entirely on the host at step runtime
+    (deterministic LRU order even under async dispatch; no device compute
+    is launched from inside the callback — see core/host_decode.py)."""
+    store = refs[0].store
+    names = tuple(r.name for r in refs)
+    for r in refs:
+        if r.store is not store:
+            raise ExpertStoreError(
+                "all expert refs of one MoE block must share a store")
+    shapes = [jax.ShapeDtypeStruct((r.n_experts,) + tuple(r.expert_shape),
+                                   jnp.dtype(r.dtype_str)) for r in refs]
+
+    def host_fetch(layer, ids):
+        return store.fetch_step(names, int(layer), np.asarray(ids))
+
+    outs = io_callback(host_fetch, shapes, refs[0].layer_ids, topk_i,
+                       ordered=True)
+    return tuple(outs)
+
+
+def install_expert_store(params, *, budget_bytes=None, codec=None,
+                         store=None, min_bytes: int = 0):
+    """Replace every dense ``(L, E, ...)`` expert stack in ``params`` with
+    an :class:`ExpertRef` backed by a (new or given) :class:`ExpertStore`.
+
+    Runs BEFORE ``assign_weight_modes`` (which passes existing handles
+    through), so expert streaming composes with any weight-execution mode.
+    Leaves smaller than ``min_bytes`` or escaping compression stay dense.
+    Returns ``(tree, store)``; ``store`` is None when nothing converted.
+    """
+    from repro.runtime.weights import is_handle
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_handle)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "name",
+             getattr(k, "idx", k)))) for k in path) for path, _ in flat]
+    est = store
+    out = []
+    for name, (_, leaf) in zip(names, flat):
+        if (not is_handle(leaf) and is_expert_leaf(name, leaf)
+                and leaf.size * leaf.dtype.itemsize >= min_bytes):
+            if est is None:
+                est = ExpertStore(budget_bytes=budget_bytes, codec=codec)
+            if est.add_leaf(name, leaf):
+                out.append(est.ref(name))
+                continue
+        out.append(leaf)
+    converted = est is not None and bool(est.names())
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            est if converted else None)

@@ -434,11 +434,20 @@ def stream_stats(tree) -> dict:
     ``flat_stream_tensors`` is the subset stored as L=1 stacks of plain 2-D
     leaves (embed / lm_head), which sit outside the layer loop and decode
     once per step rather than once per layer."""
+    from repro.runtime.experts import ExpertRef
     total_raw = total_dev = 0
     counts = {"streamed_tensors": 0, "fused_tensors": 0, "dense_handles": 0,
-              "flat_stream_tensors": 0, "overlap_eligible_tensors": 0}
+              "flat_stream_tensors": 0, "overlap_eligible_tensors": 0,
+              "expert_tensors": 0}
     for leaf in jax.tree.leaves(tree, is_leaf=is_handle):
-        if isinstance(leaf, StreamedWeight):
+        if isinstance(leaf, ExpertRef):
+            # expert stacks live as compressed records in HOST RAM; the
+            # device holds only the tiny (L,) layer-id vector, so their
+            # raw bytes count toward hbm_ratio with ~zero device bytes
+            counts["expert_tensors"] += 1
+            total_raw += leaf.raw_nbytes()
+            total_dev += leaf.layer_ids.size * leaf.layer_ids.dtype.itemsize
+        elif isinstance(leaf, StreamedWeight):
             counts["streamed_tensors"] += 1
             if leaf.flat:
                 counts["flat_stream_tensors"] += 1

@@ -143,17 +143,24 @@ def is_handle(x) -> bool:
 
 def handle_kind(leaf) -> str:
     """Weight-execution kind of a tree leaf: "dense"/"stream"/"fused" for
-    handles, "raw" for plain arrays — the shared vocabulary the restore
-    report and the serve health line use to describe a (possibly mixed)
-    degraded tree.  All kinds produce bit-identical logits (module
-    docstring), so a mixed kind census is a capacity/latency statement,
-    never a correctness one."""
+    handles, "expert" for an expert-store reference
+    (``runtime.experts.ExpertRef``), "raw" for plain arrays — the shared
+    vocabulary the restore report and the serve health line use to
+    describe a (possibly mixed) degraded tree.  All kinds produce
+    bit-identical logits (module docstring; experts: models/moe.py), so a
+    mixed kind census is a capacity/latency statement, never a
+    correctness one."""
     if isinstance(leaf, DenseWeight):
         return "dense"
     if isinstance(leaf, StreamedWeight):
         return "stream"
     if isinstance(leaf, FusedWeight):
         return "fused"
+    if isinstance(leaf, WeightHandle):
+        # lazy: experts.py imports this module at load time
+        from repro.runtime.experts import ExpertRef
+        if isinstance(leaf, ExpertRef):
+            return "expert"
     return "raw"
 
 
